@@ -1,0 +1,1 @@
+"""Benchmarks: one module per paper figure + GEMM wall-clock + roofline."""

@@ -1,0 +1,87 @@
+"""Real wall-clock GEMM benchmarks on this host.
+
+Three tiers:
+  * XLA jnp.dot baseline (what the dry-run path lowers),
+  * the blocked TPU-ref oracle (same arithmetic order as the Pallas grid),
+  * the Pallas kernel in interpret mode on a small shape (correct-path
+    sanity only — interpret mode is not a performance statement; the real
+    perf path is Mosaic on TPU).
+
+Also times the paper's coarse->fine empirical search protocol (Section 3.3)
+over Pallas block configs using the XLA backend as the stand-in executor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.harness import Row, time_fn, write_csv
+from repro.core.blocking import BlockConfig, derive_block_config, search_grid
+from repro.kernels.gemm import gemm_pallas
+from repro.kernels.ref import blocked_gemm_tpu_ref, gemm_ref
+
+
+def _gflops(m, k, n, us):
+    return 2.0 * m * k * n / (us * 1e-6) / 1e9
+
+
+def run() -> list[Row]:
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # XLA baseline across sizes.
+    lines = []
+    for m in (256, 512, 1024):
+        a = jnp.asarray(rng.normal(size=(m, m)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(m, m)), jnp.float32)
+        f = jax.jit(lambda a, b: gemm_ref(a, b))
+        us = time_fn(lambda: jax.block_until_ready(f(a, b)), reps=7)
+        g = _gflops(m, m, m, us)
+        lines.append(f"xla,{m},{us:.1f},{g:.2f}")
+        if m == 1024:
+            rows.append(Row("gemm_xla_1024", us, f"gflops={g:.2f}"))
+
+    # Blocked-ref (Pallas arithmetic order) vs XLA at 512.
+    a = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(512, 512)), jnp.float32)
+    cfg = BlockConfig(bm=128, bk=128, bn=128, dtype_bytes=4)
+    fb = jax.jit(lambda a, b: blocked_gemm_tpu_ref(a, b, cfg))
+    us = time_fn(lambda: jax.block_until_ready(fb(a, b)), reps=5)
+    lines.append(f"blocked_ref,512,{us:.1f},{_gflops(512,512,512,us):.2f}")
+    rows.append(Row("gemm_blocked_ref_512", us, f"gflops={_gflops(512,512,512,us):.2f}"))
+
+    # Pallas interpret-mode correctness-path timing (small).
+    ai = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    bi = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    us = time_fn(
+        lambda: jax.block_until_ready(gemm_pallas(ai, bi, cfg, interpret=True)), reps=3,
+        warmup=1,
+    )
+    lines.append(f"pallas_interpret,256,{us:.1f},{_gflops(256,256,256,us):.2f}")
+    rows.append(Row("gemm_pallas_interpret_256", us, "correctness-path (not perf)"))
+    write_csv("gemm_wallclock.csv", "impl,m,us,gflops", lines)
+
+    # Section 3.3 protocol: coarse sweep -> refine around the winner.
+    m = k = n = 512
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+
+    def run_cfg(cfg):
+        f = jax.jit(lambda a, b: blocked_gemm_tpu_ref(a, b, cfg))
+        return time_fn(lambda: jax.block_until_ready(f(a, b)), reps=3, warmup=1)
+
+    coarse = [c for c in search_grid(coarse=True) if c.bm <= 512 and c.bk <= 512][:6]
+    results = [(run_cfg(c), c) for c in coarse]
+    best_us, best_cfg = min(results, key=lambda x: x[0])
+    analytic = derive_block_config(m, k, n, dtype_bytes=4)
+    rows.append(
+        Row(
+            "gemm_cache_search_protocol",
+            best_us,
+            f"empirical=(bm={best_cfg.bm},bk={best_cfg.bk}) "
+            f"analytic=(bm={analytic.bm},bk={analytic.bk})",
+        )
+    )
+    return rows

@@ -1,0 +1,27 @@
+"""Scheduler micro-benchmarks: partitioner overhead must be negligible vs a
+training step (it runs on the host every step under CA-DAS)."""
+
+from __future__ import annotations
+
+from benchmarks.harness import Row, time_fn
+from repro.core import schedule as S
+from repro.core.asymmetric import AsymmetricMesh, DeviceClass
+
+
+def run() -> list[Row]:
+    rows = []
+    us = time_fn(lambda: S.sas_partition(4096, [3.0, 1.0], tiles=[152, 32]), reps=20)
+    rows.append(Row("sched_sas_partition_4096", us, "per-step host overhead"))
+
+    us = time_fn(lambda: S.das_schedule(4096, [4.0, 1.0], [152, 32]), reps=20)
+    rows.append(Row("sched_das_schedule_4096", us, "discrete-event greedy"))
+
+    am = AsymmetricMesh(
+        [DeviceClass("a", chips_per_pod=256),
+         DeviceClass("b", chips_per_pod=256, rel_throughput=0.35)],
+        strategy="ca-das",
+    )
+    us = time_fn(lambda: am.batch_layout(256), reps=20)
+    imb = am.imbalance(am.batch_layout(256))
+    rows.append(Row("sched_batch_layout_256", us, f"imbalance={imb:.3f}"))
+    return rows

@@ -1,0 +1,45 @@
+"""Benchmark harness: timing helper + CSV emission.
+
+Every benchmark module exposes ``run() -> list[Row]``; ``run.py`` collects
+them and prints the ``name,us_per_call,derived`` CSV required by the
+assignment, plus writes per-figure CSV artifacts under ``artifacts/bench``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Callable, Optional
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str  # key metric, e.g. "gflops=11.42"
+
+
+def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in µs."""
+
+    for _ in range(warmup):
+        fn(*args)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def write_csv(fname: str, header: str, lines: list[str]) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, fname)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        f.write("\n".join(lines) + "\n")
+    return path

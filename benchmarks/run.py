@@ -1,0 +1,41 @@
+"""Benchmark entry point: ``PYTHONPATH=src python -m benchmarks.run``.
+
+One function per paper table/figure (see bench_paper_figures) plus the real
+GEMM wall-clock tier and scheduler overheads.  Prints ``name,us_per_call,
+derived`` CSV; per-figure data lands in ``artifacts/bench/*.csv``.  If
+dry-run artifacts exist, appends the roofline summary (§Roofline inputs).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import bench_gemm, bench_paper_figures, bench_schedulers
+
+    rows = []
+    rows += bench_paper_figures.run()
+    rows += bench_schedulers.run()
+    rows += bench_gemm.run()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r.name},{r.us_per_call:.1f},{r.derived}")
+
+    art = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+    if os.path.isdir(art) and os.listdir(art):
+        from repro.launch import roofline
+
+        rows_r = roofline.load_rows(art, mesh="pod16x16")
+        if rows_r:
+            print("\n# Roofline (single-pod 16x16, per-device terms):")
+            print(roofline.format_table(rows_r))
+
+
+if __name__ == "__main__":
+    main()

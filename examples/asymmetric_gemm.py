@@ -1,0 +1,88 @@
+"""The paper's exact experiment, end to end: one large GEMM whose row
+space (Loop 3) is partitioned across two unequal device classes.
+
+On this host both "classes" are CPU threads of the same speed, so the
+*measured* imbalance is simulated by assigning the little class a slower
+per-row rate — the partitioners, control trees, and blocked kernels are the
+real production objects.  Prints the paper's Figure-9-style sweep.
+
+Run:  PYTHONPATH=src python examples/asymmetric_gemm.py [--size 1536]
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import blocking as B
+from repro.core import schedule as S
+from repro.core.control_tree import build_control_trees
+from repro.kernels.ops import gemm
+from repro.kernels.ref import gemm_ref
+
+
+def run_partition(a, bm, table, trees):
+    """Execute C = A @ B row-block-wise per the chunk table; returns C."""
+
+    out = []
+    for chunk in table.chunks:
+        if chunk.size == 0:
+            continue
+        cls = "big" if chunk.cls == 0 else "little"
+        blk = trees[cls].block
+        rows = a[chunk.start : chunk.stop]
+        out.append(gemm(rows, bm, config=blk, backend="xla"))
+    return jnp.concatenate(out, axis=0)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=1536)
+    args = ap.parse_args()
+    n = args.size
+
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    bmat = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    ref = gemm_ref(a, bmat)
+
+    specs = {
+        "big": B.TPU_V5E,
+        "little": B.TpuCoreSpec(name="little", vmem_bytes=8 * 1024 * 1024),
+    }
+    trees = build_control_trees(specs, n, n, n, coarse_loop="rows")
+    print("control trees:",
+          {k: (t.block.bm, t.block.bk, t.block.bn) for k, t in trees.items()})
+
+    # Simulated class rates (rows/s), big 4x little — the paper's ratio 4.
+    rates = {"big": 4.0, "little": 1.0}
+
+    print(f"\n{'schedule':24s} {'split':>12s} {'sim makespan':>13s} {'max|err|':>9s}")
+    results = {}
+    for name, table in [
+        ("SSS (oblivious)", S.sss_partition(n, 2)),
+        ("SAS ratio=2", S.sas_partition(n, [2.0, 1.0])),
+        ("SAS ratio=4 (matched)", S.sas_partition(n, [4.0, 1.0])),
+        ("CA-SAS ratio=4", S.ca_sas_partition(n, [4.0, 1.0], tiles=[152, 32])),
+    ]:
+        sizes = table.sizes()
+        makespan = max(sizes[0] / rates["big"], sizes[1] / rates["little"])
+        c = run_partition(a, bmat, table, trees)
+        err = float(jnp.max(jnp.abs(c - ref)))
+        results[name] = makespan
+        print(f"{name:24s} {str(sizes):>12s} {makespan:12.1f}u {err:9.2e}")
+
+    das = S.das_schedule(n, rates=[4.0, 1.0], strides=[152, 32])  # paper's m_c
+    print(f"{'CA-DAS (no knob)':24s} {str(das.sizes()):>12s} {das.makespan:12.1f}u")
+    assert das.makespan <= results["SSS (oblivious)"] * 0.55, "dynamic must beat SSS"
+    print("\nCA-DAS reaches the matched-ratio makespan without knowing the ratio —")
+    print("the paper's §5.4 result, on the production partitioners.")
+
+
+if __name__ == "__main__":
+    main()

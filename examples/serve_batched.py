@@ -1,0 +1,65 @@
+"""Serving example: batched greedy decoding with KV caches (and SSM states),
+with the request batch split across heterogeneous classes by the paper's
+schedulers.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--arch mixtral-8x7b]
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.asymmetric import AsymmetricMesh, biglittle_classes
+from repro.models import model_zoo as Z
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--gen-len", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = Z.init_params(jax.random.PRNGKey(0), cfg)
+
+    asym = AsymmetricMesh(biglittle_classes(chips_per_pod=1), strategy="ca-das",
+                          batch_tile=1)
+    print("request batch split across classes:", asym.chunk_table(args.batch).sizes())
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
+    )
+    seq_cap = args.prompt_len + args.gen_len
+    decode = jax.jit(Z.make_decode_fn(cfg))
+    state = Z.init_decode_state(cfg, args.batch, seq_cap)
+
+    t0 = time.time()
+    logits = None
+    toks = [prompts]
+    for t in range(args.prompt_len):
+        logits, state = decode(params, {"tokens": prompts[:, t:t+1]}, state, jnp.int32(t))
+    for t in range(args.prompt_len, seq_cap):
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        toks.append(nxt)
+        logits, state = decode(params, {"tokens": nxt}, state, jnp.int32(t))
+    out = jnp.concatenate(toks, axis=1)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} generated {args.gen_len} tokens x {args.batch} reqs "
+          f"in {dt:.2f}s ({args.batch*args.gen_len/dt:.1f} tok/s)")
+    print("sample continuation:", np.asarray(out[0, args.prompt_len:]).tolist())
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Core: the paper's contribution — cache-aware GEMM configuration and
+asymmetric scheduling — as composable JAX-side modules."""
+
+from repro.core.blocking import (
+    BlockConfig,
+    CacheHierarchy,
+    GotoBlocking,
+    TpuCoreSpec,
+    derive_block_config,
+    derive_goto_blocking,
+)
+from repro.core.control_tree import ControlTree, build_control_trees
+from repro.core.schedule import (
+    ChunkTable,
+    DynamicScheduler,
+    ca_sas_partition,
+    das_schedule,
+    sas_partition,
+    sss_partition,
+)
+from repro.core.asymmetric import AsymmetricMesh, DeviceClass
+
+__all__ = [
+    "BlockConfig", "CacheHierarchy", "GotoBlocking", "TpuCoreSpec",
+    "derive_block_config", "derive_goto_blocking",
+    "ControlTree", "build_control_trees",
+    "ChunkTable", "DynamicScheduler",
+    "ca_sas_partition", "das_schedule", "sas_partition", "sss_partition",
+    "AsymmetricMesh", "DeviceClass",
+]

@@ -1,0 +1,190 @@
+"""Asymmetric device-class abstraction over a JAX mesh.
+
+The paper's big.LITTLE clusters become *device classes*: groups of pods (or
+hosts) with unequal sustained throughput.  Real fleets exhibit this through
+multi-generation hardware (a v5e pod next to a v4 pod), thermally degraded
+hosts, or pods with different ICI topology.  A mesh axis (``"pod"``) indexes
+the classes; within a class, work is spread symmetrically over the
+``data``/``model`` axes (the paper's fine-grain Loop-4 partitioning).
+
+:class:`AsymmetricMesh` couples the mesh with a per-class performance model
+and the schedulers of :mod:`repro.core.schedule`, producing the padded
+batch layout that the SPMD train step consumes:
+
+  * ``chunk table``   — per-pod batch share (rows of the paper's Loop 3),
+  * ``batch layout``  — ``(n_pods, c_max, ...)`` plus per-pod valid counts,
+  * masked loss / weighted all-reduce make gradients exact under padding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core import blocking as B
+from repro.core import schedule as S
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceClass:
+    """One throughput class of accelerators (the analogue of a cluster)."""
+
+    name: str
+    n_pods: int = 1
+    chips_per_pod: int = 256
+    peak_flops: float = 197e12      # per chip, bf16
+    hbm_bw: float = 819e9           # per chip
+    ici_bw: float = 50e9            # per link
+    # Sustained throughput relative to the fastest class (the paper's ratio
+    # knob normalizes the A15 to 1).  Calibrated online by DynamicScheduler.
+    rel_throughput: float = 1.0
+    spec: B.TpuCoreSpec = B.TPU_V5E
+
+
+# A homogeneous production fleet (the dry-run default): two identical pods.
+def homogeneous_classes(n_pods: int = 2, chips_per_pod: int = 256) -> list[DeviceClass]:
+    return [
+        DeviceClass(name=f"pod{i}", n_pods=1, chips_per_pod=chips_per_pod)
+        for i in range(n_pods)
+    ]
+
+
+# The motivating heterogeneous fleet: a current-gen pod plus a previous-gen
+# pod at ~0.35 relative sustained throughput (v4 ≈ 275/197 peak but lower
+# achieved bf16 utilization + half HBM bw in this scenario) — the TPU
+# analogue of the paper's 9.6 vs 2.4 GFLOPS clusters (ratio 4).
+def biglittle_classes(chips_per_pod: int = 256) -> list[DeviceClass]:
+    big = DeviceClass(name="big", chips_per_pod=chips_per_pod, rel_throughput=1.0)
+    little = DeviceClass(
+        name="little",
+        chips_per_pod=chips_per_pod,
+        peak_flops=99e12,
+        hbm_bw=410e9,
+        rel_throughput=0.25,
+        spec=dataclasses.replace(B.TPU_V5E, name="tpu-little", vmem_bytes=8 * 1024 * 1024),
+    )
+    return [big, little]
+
+
+@dataclasses.dataclass
+class BatchLayout:
+    """Padded per-pod batch layout for the asymmetric SPMD step."""
+
+    global_batch: int
+    sizes: list[int]          # valid rows per pod, sum == global_batch
+    c_max: int                # padded per-pod rows
+    mask: np.ndarray          # (n_pods, c_max) float32 validity mask
+
+    @property
+    def padded_batch(self) -> int:
+        return len(self.sizes) * self.c_max
+
+
+class AsymmetricMesh:
+    """Couples device classes with the paper's schedulers.
+
+    This object is pure scheduling state — it never touches
+    ``jax.devices()`` — so it can be built anywhere (tests, dry-run,
+    launcher) and combined with whatever ``jax.sharding.Mesh`` the caller
+    constructs for the same pod count.
+    """
+
+    def __init__(
+        self,
+        classes: Sequence[DeviceClass],
+        *,
+        strategy: str = "ca-das",
+        batch_tile: int = 8,
+        init_ratio: Optional[float] = None,
+    ):
+        if strategy not in ("sss", "sas", "ca-sas", "das", "ca-das"):
+            raise ValueError(f"unknown strategy {strategy!r}")
+        self.classes = list(classes)
+        self.strategy = strategy
+        self.batch_tile = batch_tile
+        self.n_pods = sum(c.n_pods for c in self.classes)
+        # Per-pod throughput weights (a class may own several pods).
+        self._pod_class = [
+            (ci, c) for ci, c in enumerate(self.classes) for _ in range(c.n_pods)
+        ]
+        ratios = [c.rel_throughput for _, c in self._pod_class]
+        if init_ratio is not None and len(ratios) == 2:
+            ratios = [init_ratio, 1.0]
+        workers = [c.chips_per_pod for _, c in self._pod_class]
+        tiles = self._tiles()
+        self.scheduler = S.DynamicScheduler(
+            self.n_pods,
+            init_ratios=ratios,
+            workers=workers,
+            tiles=tiles if strategy in ("ca-sas", "ca-das") else [batch_tile] * self.n_pods,
+        )
+
+    def _tiles(self) -> list[int]:
+        # CA: each pod's chunk aligns to its own microbatch tile — a class
+        # with fewer chips / less VMEM gets a smaller stride, mirroring the
+        # per-class m_c of the paper.
+        out = []
+        for _, c in self._pod_class:
+            scale = max(1, int(round(c.rel_throughput / max(
+                cc.rel_throughput for cc in self.classes))))
+            out.append(self.batch_tile * scale)
+        return out
+
+    # -- scheduling -------------------------------------------------------
+
+    def chunk_table(self, global_batch: int) -> S.ChunkTable:
+        if self.strategy == "sss":
+            return S.sss_partition(global_batch, self.n_pods)
+        return self.scheduler.table(global_batch)
+
+    def observe_step(self, per_pod_units: Sequence[int], per_pod_times: Sequence[float]):
+        """Feed measured step times back (DAS/CA-DAS straggler mitigation)."""
+
+        if self.strategy in ("das", "ca-das"):
+            self.scheduler.observe(per_pod_units, per_pod_times)
+
+    def batch_layout(self, global_batch: int) -> BatchLayout:
+        table = self.chunk_table(global_batch)
+        sizes = table.sizes()
+        while len(sizes) < self.n_pods:
+            sizes.append(0)
+        c_max = max(
+            self.batch_tile,
+            int(np.ceil(max(sizes) / self.batch_tile)) * self.batch_tile,
+        )
+        mask = np.zeros((self.n_pods, c_max), np.float32)
+        for i, s in enumerate(sizes):
+            mask[i, :s] = 1.0
+        return BatchLayout(global_batch=global_batch, sizes=sizes, c_max=c_max, mask=mask)
+
+    # -- analysis ---------------------------------------------------------
+
+    def imbalance(self, layout: BatchLayout) -> float:
+        """Relative makespan excess vs a perfectly rate-proportional split."""
+
+        rates = np.array(
+            [c.rel_throughput * c.chips_per_pod for _, c in self._pod_class], np.float64
+        )
+        t = np.array(layout.sizes) / rates
+        ideal = layout.global_batch / rates.sum()
+        return float(t.max() / ideal - 1.0)
+
+
+def calibrate_ratios(step_times: Sequence[Sequence[float]], units: Sequence[int]) -> list[float]:
+    """Throughput ratios from measured per-pod step times (median-robust)."""
+
+    rates = [u / float(np.median(ts)) for u, ts in zip(units, step_times)]
+    top = max(rates)
+    return [r / top for r in rates]
+
+
+__all__ = [
+    "DeviceClass",
+    "AsymmetricMesh",
+    "BatchLayout",
+    "homogeneous_classes",
+    "biglittle_classes",
+    "calibrate_ratios",
+]

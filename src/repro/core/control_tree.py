@@ -1,0 +1,115 @@
+"""Control trees: per-device-class execution configuration.
+
+BLIS drives every operation from a recursive *control tree* encoding loop
+strides, packing points, and per-loop parallelization (paper Section 5.1).
+The paper's key mechanism (Section 5.3) duplicates this structure — one tree
+per core class — so "fast" and "slow" threads run with different cache
+parameters and, potentially, different micro-kernels.
+
+Here a :class:`ControlTree` carries, per device class:
+
+  * the Pallas :class:`~repro.core.blocking.BlockConfig` (the loop strides),
+  * the coarse/fine loop choice (which axis is partitioned across classes
+    vs within a class — the paper's Loop 1/3 × Loop 4/5 grid),
+  * the micro-kernel selection (XLA dot vs Pallas GEMM vs interpret mode).
+
+:func:`build_control_trees` reproduces the Section 5.3 dependency: if the
+coarse axis is the *rows* axis (the paper's Loop 3), the staged B panel is
+shared between classes, forcing a common ``bk`` and a re-derived (smaller)
+``bm`` for classes with less fast memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Mapping, Optional
+
+from repro.core import blocking as B
+
+CoarseLoop = Literal["cols", "rows"]  # paper's Loop 1 (j_c/n) vs Loop 3 (i_c/m)
+FineLoop = Literal["loop4", "loop5", "both"]
+Backend = Literal["xla", "pallas", "pallas_interpret"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ControlTree:
+    """Execution configuration for one device class."""
+
+    device_class: str
+    block: B.BlockConfig
+    coarse_loop: CoarseLoop = "rows"
+    fine_loop: FineLoop = "loop4"
+    backend: Backend = "xla"
+    # TPU spec used to derive `block`; kept for re-derivation under
+    # shared-panel constraints.
+    spec: B.TpuCoreSpec = B.TPU_V5E
+
+    def with_block(self, block: B.BlockConfig) -> "ControlTree":
+        return dataclasses.replace(self, block=block)
+
+
+def build_control_trees(
+    specs: Mapping[str, B.TpuCoreSpec],
+    m: int,
+    k: int,
+    n: int,
+    *,
+    coarse_loop: CoarseLoop = "rows",
+    fine_loop: FineLoop = "loop4",
+    backend: Backend = "xla",
+    cache_aware: bool = True,
+    dtype_bytes: int = 2,
+) -> dict[str, ControlTree]:
+    """One control tree per device class (paper Sections 5.1/5.3).
+
+    With ``cache_aware=False`` every class reuses the *first* class's block
+    config — the single-control-tree baseline the paper calls plain SAS/DAS.
+    With ``cache_aware=True`` each class derives its own config; if
+    ``coarse_loop == "rows"`` (Loop 3) the B panel is shared, so ``bk`` is
+    forced to the first class's value and each other class re-derives the
+    largest ``bm`` that fits its own VMEM at that ``bk`` — the exact
+    structure of the paper's ``k_c = 952 -> m_c = 32`` adjustment.
+    """
+
+    names = list(specs)
+    if not names:
+        raise ValueError("need at least one device class")
+    first = names[0]
+    base = B.derive_block_config(m, k, n, spec=specs[first], dtype_bytes=dtype_bytes)
+    trees: dict[str, ControlTree] = {}
+    for name in names:
+        if not cache_aware:
+            blk = base
+        elif name == first:
+            blk = base
+        elif coarse_loop == "rows":
+            # Shared B panel: common bk, re-derive bm for this class's VMEM.
+            blk = _rederive_bm(specs[name], base, dtype_bytes)
+        else:
+            # Independent panels (Loop 1): fully independent derivation.
+            blk = B.derive_block_config(m, k, n, spec=specs[name], dtype_bytes=dtype_bytes)
+        trees[name] = ControlTree(
+            device_class=name,
+            block=blk,
+            coarse_loop=coarse_loop,
+            fine_loop=fine_loop,
+            backend=backend,
+            spec=specs[name],
+        )
+    return trees
+
+
+def _rederive_bm(spec: B.TpuCoreSpec, base: B.BlockConfig, dtype_bytes: int) -> B.BlockConfig:
+    budget = int(spec.vmem_bytes * spec.vmem_fill)
+    bk, bn = base.bk, base.bn
+    bm = base.bm
+    while bm > spec.mxu:
+        cfg = B.BlockConfig(bm=bm, bk=bk, bn=bn, dtype_bytes=dtype_bytes)
+        if cfg.vmem_bytes() <= budget:
+            break
+        bm //= 2
+    cfg = B.BlockConfig(bm=max(bm, spec.mxu), bk=bk, bn=bn, dtype_bytes=dtype_bytes)
+    return cfg
+
+
+__all__ = ["ControlTree", "build_control_trees", "CoarseLoop", "FineLoop", "Backend"]

@@ -1,0 +1,319 @@
+"""PartitionSpec rules for every parameter / activation / cache tensor.
+
+Axes:
+
+  * ``pod``   — data parallelism *across* pods (multi-pod mesh only);
+                gradients all-reduce over DCI, parameters replicated (or
+                int8-compressed cross-pod reduction, see collectives.py),
+  * ``data``  — within-pod data parallelism; in ``fsdp`` mode parameters
+                and optimizer state additionally shard over this axis
+                (ZeRO-3 island per pod — all-gathers stay on ICI),
+  * ``model`` — tensor parallelism (Megatron col/row split).
+
+This is the fine-grain/symmetric half of the paper's scheme (its Loop 4);
+the coarse/asymmetric half partitions the *batch* across pods via
+``core.asymmetric`` (its Loops 1/3).
+
+The rules are name-based and rank-generic: ``w1`` is column-parallel
+whether it is ``(L, D, F)`` dense or ``(L, E, D, F)`` MoE.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Column-parallel: shard output features on "model", fsdp on input features.
+_COL = {"wq", "wk", "wv", "w1", "w3", "wz", "wx", "wdt", "lm_head"}
+# Row-parallel: shard input features on "model", fsdp on output features.
+_ROW = {"wo", "w2", "out_proj"}
+# Feature-sharded vectors (live on the "model"-sharded dim).
+_VEC_MODEL = {"bq", "bk", "bv", "b1", "dt_bias", "A_log", "D", "norm_w", "conv_b_x"}
+# fsdp-only matrices (output dim too small / must stay replicated for TP).
+_NOTP = {"wbc", "router", "shared_gate"}
+# Last-dim-model only (no fsdp dim available).
+_LASTDIM_MODEL = {"conv_w_x"}
+
+
+def _data_axis(mesh: Mesh) -> Optional[str]:
+    return "data" if "data" in mesh.axis_names else None
+
+
+def dp_axes(mesh: Mesh):
+    """Batch-sharding axes: ("pod","data") on the multi-pod mesh."""
+
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def param_pspec(path, leaf, *, fsdp: bool) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    nd = leaf.ndim
+    f = "data" if fsdp else None
+
+    if name == "embed":
+        return P("model", None)
+    # NOTE (refuted experiment, kept for the record — EXPERIMENTS.md §Perf
+    # C-2): sharding fine-grained-expert MoE weights FSDP-only removes the
+    # capacity-buffer reduction but leaves the model axis idle through the
+    # MoE segment — measured 6.4× compute and 5.5× collectives WORSE on
+    # qwen2-moe train_4k.  Keep TP on d_ff; true expert parallelism
+    # (E % model == 0, all-to-all dispatch) is the structural fix.
+    if name in _COL and nd >= 2:
+        return P(*([None] * (nd - 2) + [f, "model"]))
+    if name in _ROW and nd >= 2:
+        return P(*([None] * (nd - 2) + ["model", f]))
+    if name in _NOTP and nd >= 2:
+        return P(*([None] * (nd - 2) + [f, None]))
+    if name in _LASTDIM_MODEL:
+        return P(*([None] * (nd - 1) + ["model"]))
+    if name in _VEC_MODEL and nd >= 1:
+        return P(*([None] * (nd - 1) + ["model"]))
+    return P(*([None] * nd))
+
+
+def _drop_indivisible(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding from dims the mesh axes don't divide (jit requires
+    exact divisibility for input shardings — e.g. whisper's vocab 51865)."""
+
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        ax_tuple = axes if isinstance(axes, tuple) else (axes,)
+        size = 1
+        for a in ax_tuple:
+            size *= mesh.shape[a]
+        out.append(axes if dim % size == 0 else None)
+    return P(*out)
+
+
+def array_sharding(mesh: Mesh, shape, spec: P) -> NamedSharding:
+    """NamedSharding with indivisible dims demoted to replication."""
+
+    return NamedSharding(mesh, _drop_indivisible(spec, shape, mesh))
+
+
+def shard_params(params, mesh: Mesh, *, fsdp: bool = True):
+    """NamedSharding tree for a param pytree (works on ShapeDtypeStructs)."""
+
+    def f(path, leaf):
+        spec = param_pspec(path, leaf, fsdp=fsdp and _data_axis(mesh) is not None)
+        return NamedSharding(mesh, _drop_indivisible(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def shard_opt_state(opt_state, params_sharding, mesh: Mesh):
+    """m/v mirror the params; step is replicated."""
+
+    return {
+        "m": params_sharding,
+        "v": params_sharding,
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+def batch_pspec(mesh: Mesh, batch_size: int) -> P:
+    """Batch tensors (B, ...). Falls back to replication when B is tiny."""
+
+    axes = dp_axes(mesh)
+    if axes is None:
+        return P(None)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if batch_size % size != 0:
+        # long_500k: B=1 — the batch axis cannot shard; sequence/cache
+        # dims carry the parallelism instead (see cache_pspec).
+        return P(None)
+    return P(axes)
+
+
+def batch_sharding(mesh: Mesh, batch_tree):
+    def f(leaf):
+        spec = batch_pspec(mesh, leaf.shape[0])
+        pad = [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*(list(spec) + pad)))
+
+    return jax.tree.map(f, batch_tree)
+
+
+def cache_pspec(mesh: Mesh, shape) -> P:
+    """Decode caches (L, B, S, H, Dh) / SSM states (L, B, H, N, P).
+
+    B shards over the dp axes; dim 2 (cache length for KV caches, heads for
+    SSM states) additionally shards over "model" — a 64L×32k×B128 KV cache
+    is 1.1 TB and must spread over the full mesh, not just the data axis
+    (259 GiB/device measured without this; see EXPERIMENTS.md §Dry-run).
+    When B cannot shard (B=1 long-context), dim 2 carries the data axes too.
+    """
+
+    axes = dp_axes(mesh)
+    nd = len(shape)
+    if axes is None or nd < 3:
+        return P(*([None] * nd))
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    model = mesh.shape.get("model", 1)
+    b = shape[1]
+    dim2 = []
+    if model > 1 and shape[2] % model == 0:
+        dim2 = ["model"]
+    if b % size == 0:
+        return P(*([None, axes] + [tuple(dim2) if dim2 else None] + [None] * (nd - 3)))
+    if shape[2] % (size * model) == 0:
+        return P(*([None, None, (axes + ("model",)) if dim2 else axes]
+                   + [None] * (nd - 3)))
+    return P(*([None, None] + [tuple(dim2) if dim2 else None] + [None] * (nd - 3)))
+
+
+def cache_sharding(mesh: Mesh, cache_tree):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, cache_pspec(mesh, leaf.shape)), cache_tree
+    )
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints
+# ---------------------------------------------------------------------------
+#
+# With FSDP weight rules (contracting dim sharded on "data"), GSPMD's
+# default propagation finds a zero-collective partition that REPLICATES the
+# batch and tensor-shards every activation over (data, model) — 129 GiB of
+# per-device temps on deepseek-7b train_4k (measured; EXPERIMENTS.md §Perf
+# iteration 1).  Pinning the batch axis at layer boundaries forces the
+# intended FSDP semantics (weights all-gather; activations stay
+# batch-sharded).  Models call :func:`constrain_batch`; the trainer/dry-run
+# install the mesh via :func:`use_mesh_for_activations`.
+
+_ACT_MESH: Optional[Mesh] = None
+_ACT_SEQ: bool = False
+
+
+def use_mesh_for_activations(mesh: Optional[Mesh], *, seq_shard: bool = False):
+    """Install (or clear, with None) the mesh for activation constraints.
+
+    ``seq_shard=True`` additionally shards the *sequence* dim of layer-
+    boundary activations over the "model" axis (Megatron-style sequence
+    parallelism).  The remat'd scan saves layer-input carries — with SP the
+    saved carry shrinks by the model-axis size (16×), which on deepseek-7b
+    train_4k is the difference between 46.7 and single-digit GiB/device
+    (EXPERIMENTS.md §Perf iteration 2).  GSPMD inserts the all-gather
+    before attention and the reduce-scatter after the block projections.
+    """
+
+    global _ACT_MESH, _ACT_SEQ
+    _ACT_MESH = mesh
+    _ACT_SEQ = seq_shard
+
+
+def constrain(x, spec_axes: tuple):
+    """Generic activation constraint; indivisible/absent axes are dropped.
+
+    ``spec_axes``: one entry per dim — an axis name, a tuple of names, or
+    None.  No-op when no mesh is installed.
+    """
+
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    out = []
+    for dim, axes in zip(x.shape, spec_axes):
+        if axes is None:
+            out.append(None)
+            continue
+        ax = axes if isinstance(axes, tuple) else (axes,)
+        if not all(a in mesh.axis_names for a in ax):
+            out.append(None)
+            continue
+        size = 1
+        for a in ax:
+            size *= mesh.shape[a]
+        out.append(axes if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*out)))
+
+
+def constrain_qkv_context_parallel(q, k, v, n_heads: int):
+    """Context-parallel attention for head counts the model axis can't split.
+
+    qwen2.5's 40 query heads don't divide the 16-way model axis; left to
+    itself GSPMD reshards every attention reshape with all-to-alls
+    (57 s collective term measured on prefill_32k).  Instead: shard the
+    *query sequence* over "model" (each rank computes its q-slice against
+    the full K/V, which all-gather once per layer) — classic context
+    parallelism.  No-op when heads divide the axis or no mesh is installed.
+    """
+
+    mesh = _ACT_MESH
+    if mesh is None or "model" not in mesh.axis_names:
+        return q, k, v
+    msize = mesh.shape["model"]
+    if msize <= 1 or n_heads % msize == 0:
+        return q, k, v
+    if q.shape[1] % msize != 0 or q.shape[1] == 1:
+        return q, k, v
+    axes = dp_axes(mesh)
+    q = constrain(q, (axes, "model", None, None))
+    k = constrain(k, (axes, None, None, None))
+    v = constrain(v, (axes, None, None, None))
+    return q, k, v
+
+
+def constrain_batch(x, *, extra: Optional[tuple] = None, allow_seq: bool = True):
+    """Constrain a (B, ...) activation to batch-sharded over the dp axes.
+
+    ``extra``: optional PartitionSpec tail for the trailing dims (e.g.
+    ("model",) on the vocab dim of logits).
+    """
+
+    mesh = _ACT_MESH
+    if mesh is None:
+        return x
+    axes = dp_axes(mesh)
+    if axes is None:
+        return x
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if x.shape[0] % size != 0:
+        return x
+    tail = list(extra) if extra is not None else []
+    mid = [None] * (x.ndim - 1 - len(tail))
+    if (
+        _ACT_SEQ
+        and allow_seq
+        and not tail
+        and x.ndim >= 3
+        and mid
+        and x.shape[1] % mesh.shape.get("model", 1) == 0
+        and mesh.shape.get("model", 1) > 1
+    ):
+        mid[0] = "model"
+    spec = P(*([axes] + mid + tail))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+__all__ = [
+    "param_pspec",
+    "shard_params",
+    "shard_opt_state",
+    "batch_pspec",
+    "batch_sharding",
+    "cache_pspec",
+    "cache_sharding",
+    "dp_axes",
+    "replicated",
+    "use_mesh_for_activations",
+    "constrain_batch",
+]

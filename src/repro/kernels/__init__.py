@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+``gemm.py`` is the paper's contribution (GotoBLAS five-loop blocking
+mapped onto BlockSpec VMEM tiling); ``flash_attention.py`` applies the
+same insight to attention. ``ops.py`` wraps both behind control-tree-aware
+dispatch; ``ref.py`` holds the pure-jnp oracles.
+"""
+
+from repro.kernels.ops import gemm, gemm_with_tree, linear
+from repro.kernels.gemm import gemm_pallas
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = ["gemm", "gemm_with_tree", "linear", "gemm_pallas", "flash_attention"]

@@ -1,0 +1,94 @@
+"""Jit'd public entry points for the kernels, control-tree aware.
+
+``gemm`` is the operation the whole framework routes its projection /
+FFN matmuls through.  Backend dispatch mirrors the paper's control-tree
+mechanism: the executing device class's :class:`ControlTree` selects both
+the blocking parameters *and* the micro-kernel implementation
+(paper Section 5.3: "opens the door to the use of specific highly-tuned
+micro-kernels adapted to each micro-architecture").
+
+Backends:
+
+  * ``"xla"``              — jnp.dot (the portable reference path; also what
+                             the SPMD dry-run lowers, since Mosaic cannot
+                             target the CPU backend),
+  * ``"pallas"``           — the blocked TPU kernel (hot path on TPU),
+  * ``"pallas_interpret"`` — kernel body interpreted on CPU (validation).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import BlockConfig, derive_block_config
+from repro.core.control_tree import ControlTree
+from repro.kernels.gemm import gemm_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def gemm(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    config: Optional[BlockConfig] = None,
+    backend: str = "auto",
+    out_dtype=None,
+) -> jnp.ndarray:
+    """``a @ b`` over the last/first axes with leading dims collapsed.
+
+    ``a`` may carry arbitrary leading (batch/sequence) dims; ``b`` is 2-D
+    ``(k, n)`` — the linear-layer contraction every model in the zoo uses.
+    """
+
+    out_dtype = out_dtype or a.dtype
+    if b.ndim != 2:
+        raise ValueError(f"gemm expects 2-D rhs, got {b.shape}")
+    lead = a.shape[:-1]
+    k = a.shape[-1]
+    a2 = a.reshape(-1, k)
+
+    if backend == "auto":
+        backend = "pallas" if _on_tpu() else "xla"
+
+    if backend == "xla":
+        # Declare the dot output in the compute dtype: the MXU still
+        # accumulates fp32 per shard, but GSPMD then places the
+        # tensor-parallel all-reduce on the bf16 tensor instead of an fp32
+        # intermediate — half the wire bytes on every row-parallel
+        # projection (EXPERIMENTS.md §Perf A).
+        pet = jnp.float32 if out_dtype == jnp.float32 else out_dtype
+        out = jnp.dot(a2, b, preferred_element_type=pet).astype(out_dtype)
+    elif backend == "pallas":
+        out = gemm_pallas(a2, b, config, out_dtype=out_dtype)
+    elif backend == "pallas_interpret":
+        out = gemm_pallas(a2, b, config, out_dtype=out_dtype, interpret=True)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return out.reshape(*lead, b.shape[1])
+
+
+def gemm_with_tree(a: jnp.ndarray, b: jnp.ndarray, tree: ControlTree, out_dtype=None):
+    """GEMM configured by a device class's control tree."""
+
+    return gemm(a, b, config=tree.block, backend=tree.backend, out_dtype=out_dtype)
+
+
+def linear(x, w, b=None, *, config=None, backend: str = "auto"):
+    """Affine layer on top of :func:`gemm` (bias in fp32, cast back)."""
+
+    y = gemm(x, w, config=config, backend=backend)
+    if b is not None:
+        y = (y.astype(jnp.float32) + b.astype(jnp.float32)).astype(y.dtype)
+    return y
+
+
+__all__ = ["gemm", "gemm_with_tree", "linear"]

@@ -1,0 +1,258 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: AOT lower + compile every (arch × shape × mesh) cell.
+
+For each cell this proves, without hardware:
+
+  * the sharding config is coherent (GSPMD partitions every op),
+  * the program fits (``memory_analysis`` bytes per device),
+  * and it yields the roofline inputs: parsed per-device FLOPs / HBM bytes /
+    collective bytes (``hlo_analysis``, trip-count-corrected) plus XLA's own
+    ``cost_analysis`` for cross-checking.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--force]
+
+One JSON artifact per cell lands in ``artifacts/dryrun/``.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config, list_configs  # noqa: E402
+from repro.distributed import sharding as SH  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model_zoo as Z  # noqa: E402
+from repro.optim import adamw as O  # noqa: E402
+
+
+def _bf16_specs(tree):
+    """Serving runs bf16 weights (training keeps fp32 masters)."""
+
+    def f(x):
+        dt = jnp.bfloat16 if x.dtype == jnp.float32 and x.ndim >= 2 else x.dtype
+        return jax.ShapeDtypeStruct(x.shape, dt)
+
+    return jax.tree.map(f, tree)
+
+
+def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
+               seq_shard=True):
+    """Returns (fn, example_args_specs, in_shardings, out_shardings)."""
+
+    cfg = get_config(arch_name)
+    SH.use_mesh_for_activations(mesh, seq_shard=seq_shard)
+    shape = next(s for s in cfg.shapes(include_skipped=True) if s.name == shape_name)
+    params_spec = jax.eval_shape(lambda: Z.init_params(jax.random.PRNGKey(0), cfg))
+    batch = Z.batch_spec(cfg, shape)
+    batch_sh = SH.batch_sharding(mesh, batch)
+
+    if shape.kind == "train":
+        p_sh = SH.shard_params(params_spec, mesh, fsdp=fsdp)
+        opt_spec = jax.eval_shape(O.init_opt_state, params_spec)
+        o_sh = SH.shard_opt_state(None, p_sh, mesh)
+        opt_cfg = O.AdamWConfig()
+        loss = Z.make_loss_fn(cfg, remat=remat)
+
+        def train_step(params, opt_state, b):
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, b)
+            params, opt_state, om = O.adamw_update(params, grads, opt_state, opt_cfg)
+            return params, opt_state, l
+
+        return (
+            train_step,
+            (params_spec, opt_spec, batch),
+            (p_sh, o_sh, batch_sh),
+            (p_sh, o_sh, NamedSharding(mesh, P())),
+        )
+
+    # Inference cells: bf16 weights, no optimizer.
+    params_bf16 = _bf16_specs(params_spec)
+    p_sh = SH.shard_params(params_bf16, mesh, fsdp=False)
+
+    if shape.kind == "prefill":
+        fn = Z.make_prefill_fn(cfg)
+        logits_sh = SH.array_sharding(
+            mesh,
+            (shape.global_batch, shape.seq_len, cfg.vocab),
+            P(SH.batch_pspec(mesh, shape.global_batch)[0], None, "model"),
+        )
+        return fn, (params_bf16, batch), (p_sh, batch_sh), logits_sh
+
+    # decode
+    state_spec = Z.decode_state_spec(cfg, shape.global_batch, shape.seq_len)
+    state_sh = SH.cache_sharding(mesh, state_spec)
+    fn = Z.make_decode_fn(cfg)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    logits_sh = SH.array_sharding(
+        mesh,
+        (shape.global_batch, 1, cfg.vocab),
+        P(SH.batch_pspec(mesh, shape.global_batch)[0], None, "model"),
+    )
+    return (
+        fn,
+        (params_bf16, batch, state_spec, pos_spec),
+        (p_sh, batch_sh, state_sh, NamedSharding(mesh, P())),
+        (logits_sh, state_sh),
+    )
+
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
+             force: bool = False, remat: bool = True, fsdp: bool = True,
+             seq_shard: bool = True, tag: str = "") -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    cell_id = f"{arch_name}__{shape_name}__{mesh_tag}" + (f"__{tag}" if tag else "")
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch_name)
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": mesh_tag,
+        "tag": tag,
+        "ok": False,
+        "skipped": False,
+    }
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        rec.update(skipped=True, reason="full quadratic attention (see DESIGN.md)")
+        _write(path, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    try:
+        t0 = time.time()
+        fn, args, in_sh, out_sh = build_cell(
+            arch_name, shape_name, mesh, remat=remat, fsdp=fsdp, seq_shard=seq_shard
+        )
+        # Donate the big mutable state: params+opt for train (step output
+        # aliases input), the KV/SSM caches for decode.
+        donate = (0, 1) if len(args) == 3 else ((2,) if len(args) == 4 else ())
+        with mesh:
+            lowered = jax.jit(
+                fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+            ).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        cost = hlo_analysis.analyze(text)
+
+        rec.update(
+            ok=True,
+            n_chips=n_chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "alias_bytes": ma.alias_size_in_bytes,
+                "total_bytes": ma.argument_size_in_bytes
+                + ma.temp_size_in_bytes
+                + ma.output_size_in_bytes
+                - ma.alias_size_in_bytes,
+            },
+            xla_cost={
+                "flops": ca.get("flops"),
+                "bytes_accessed": ca.get("bytes accessed"),
+            },
+            hlo_cost=cost.as_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 — a failed cell is a recorded bug
+        rec.update(error=f"{type(e).__name__}: {e}", trace=traceback.format_exc()[-2000:])
+    _write(path, rec)
+    return rec
+
+
+def _write(path, rec):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = list_configs() if (args.all or not args.arch) else [args.arch]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (
+            [s.name for s in cfg.shapes(include_skipped=True)]
+            if (args.all or not args.shape)
+            else [args.shape]
+        )
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(
+                    arch,
+                    shape,
+                    multi_pod=mp,
+                    out_dir=args.out,
+                    force=args.force,
+                    remat=not args.no_remat,
+                    fsdp=not args.no_fsdp,
+                    seq_shard=not args.no_seq_shard,
+                    tag=args.tag,
+                )
+                if rec.get("skipped"):
+                    n_skip += 1
+                    status = "SKIP"
+                elif rec.get("ok"):
+                    n_ok += 1
+                    status = "ok"
+                else:
+                    n_fail += 1
+                    status = "FAIL"
+                mem = rec.get("memory", {}).get("total_bytes")
+                mem_s = f"{mem/2**30:6.2f} GiB/dev" if mem else "-"
+                print(
+                    f"[{status:4s}] {arch:18s} {shape:12s} "
+                    f"{'2x16x16' if mp else '16x16':8s} {mem_s} "
+                    f"compile={rec.get('compile_s','-')}s"
+                    + (f"  err={rec.get('error','')[:120]}" if status == "FAIL" else ""),
+                    flush=True,
+                )
+    print(f"\ndry-run summary: ok={n_ok} fail={n_fail} skip={n_skip}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,437 @@
+"""Static cost analysis of compiled (post-SPMD-partitioning) HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's flop counter visits each
+computation once, so a ``jax.lax.scan`` over L layers reports the body's
+FLOPs a single time (~1/L of the truth — verified empirically in
+EXPERIMENTS.md §Dry-run).  This parser rebuilds the call graph
+(ENTRY → while bodies → fusions), extracts each while loop's trip count
+from its condition computation, and multiplies.
+
+Outputs per compiled module (all **per device**, since SPMD-partitioned
+HLO is the per-device program):
+
+  * ``flops``            — 2·M·N·K over every dot/convolution, × trip counts,
+  * ``bytes``            — operand+result bytes of every top-level kernel op
+                           (fusion internals excluded: the fusion boundary
+                           is the HBM traffic boundary), × trip counts,
+  * ``collective_bytes`` — operand bytes of all-reduce / all-gather /
+                           reduce-scatter / all-to-all / collective-permute,
+                           × trip counts, split by type.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f4e2m1fn": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_OP_PREFIX_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\("
+)
+
+
+def _parse_op_line(line: str):
+    """Split an HLO op line into (name, type, opcode, args, attrs) with
+    balanced-paren scanning — greedy regexes corrupt operand lists for ops
+    carrying parenthesized attrs (``dimensions={...}``, ``sharding=...``)."""
+
+    m = _OP_PREFIX_RE.match(line)
+    if not m:
+        return None
+    depth = 1
+    i = m.end()
+    while i < len(line) and depth:
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+        i += 1
+    args = line[m.end() : i - 1]
+    attrs = line[i:]
+    return m.group(1), m.group(2), m.group(3), args, attrs
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*{\s*$")
+_CALL_ATTR_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "while",
+    "conditional", "call", "after-all", "add-dependency", "custom-call", "iota",
+    "partition-id", "replica-id",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    is_entry: bool = False
+
+
+def _parse_operand_names(args: str) -> list[str]:
+    # operands look like "%a.1, f32[8]{0} %b, ..." or "bf16[2,3]{1,0} %x"
+    names = []
+    depth = 0
+    cur = []
+    for ch in args:
+        if ch == "(" or ch == "{":
+            depth += 1
+        elif ch == ")" or ch == "}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            names.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        names.append("".join(cur))
+    out = []
+    for tok in names:
+        tok = tok.strip()
+        m = re.search(r"%?([\w\.\-]+)\s*$", tok)
+        out.append(m.group(1) if m else tok)
+    return out
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    text = re.sub(r"/\*.*?\*/", "", text)  # strip /*index=N*/ tuple comments
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip()) if line.strip().endswith("{") else None
+            if m and "=" not in line.split("{")[0]:
+                cur = Computation(
+                    name=m.group(1), ops=[], is_entry=line.strip().startswith("ENTRY")
+                )
+            continue
+        s = line.strip()
+        if s.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_op_line(line)
+        if parsed:
+            name, type_str, opcode, args, attrs = parsed
+            cur.ops.append(
+                Op(
+                    name=name,
+                    type_str=type_str,
+                    opcode=opcode,
+                    operands=_parse_operand_names(args),
+                    attrs=attrs or "",
+                    raw=line,
+                )
+            )
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant compared in the condition (scan loops)."""
+
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", op.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    attn_score_bytes: float = 0.0  # HBM traffic of materialized attention
+    # scores — VMEM-resident under the Pallas flash kernel on TPU
+    collective_bytes: float = 0.0
+    by_collective: dict = dataclasses.field(default_factory=dict)
+    dot_count: int = 0
+    while_trips: dict = dataclasses.field(default_factory=dict)
+    top_bytes: list = dataclasses.field(default_factory=list)   # (bytes, op, comp)
+    top_flops: list = dataclasses.field(default_factory=list)   # (flops, op, comp)
+
+    def as_dict(self):
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "attn_score_bytes": self.attn_score_bytes,
+            "collective_bytes": self.collective_bytes,
+            "by_collective": dict(self.by_collective),
+            "dot_count": self.dot_count,
+            "while_trips": dict(self.while_trips),
+        }
+
+
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
+    out_dims = _shape_dims(op.type_str)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.raw)
+    contract = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    lhs_type = symbols.get(op.operands[0], "")
+    lhs_dims = _shape_dims(lhs_type)
+    k = 1
+    for c in contract:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * max(k, 1)
+
+
+def _conv_flops(op: Op, symbols: dict[str, str]) -> float:
+    # approximate: 2 * prod(out) * prod(kernel dims) (feature dims included)
+    out = 1
+    for d in _shape_dims(op.type_str):
+        out *= d
+    rhs_dims = _shape_dims(symbols.get(op.operands[1], "")) if len(op.operands) > 1 else []
+    k = 1
+    for d in rhs_dims[:-1]:  # exclude output-feature dim (already in out)
+        k *= d
+    return 2.0 * out * max(k, 1)
+
+
+def _fusion_bytes(op: Op, comps, symbols, parent_syms) -> float:
+    """Effective HBM bytes of one fusion call.
+
+    Parameters consumed (only) through a ``dynamic-slice`` inside the body
+    are charged at the slice size, not the full operand (per-layer weight
+    selection from scan-stacked tensors reads one layer, not all L).  A
+    root ``dynamic-update-slice`` writes (and re-reads) only its update
+    window — XLA aliases the big buffer in place.
+    """
+
+    mm = re.search(r"calls=%?([\w\.\-]+)", op.raw)
+    out_b = _shape_bytes(op.type_str)
+    in_full = [_shape_bytes(parent_syms.get(o, "")) for o in op.operands]
+    if not mm or mm.group(1) not in comps:
+        return out_b + sum(in_full)
+    body = comps[mm.group(1)]
+    body_syms = symbols[mm.group(1)]
+
+    # Pure dtype/layout-cast fusions (convert/bitcast/reshape only) never
+    # reach HBM on TPU — Mosaic/XLA:TPU folds them into the consumer; they
+    # exist as separate kernels only in this CPU lowering of bf16 dots.
+    kinds = {bop.opcode for bop in body.ops if bop.opcode != "parameter"}
+    if kinds <= {"convert", "bitcast", "reshape", "copy", "transpose"}:
+        # Dtype/layout-only fusions: XLA:TPU folds converts into consumers
+        # and transposes into dot dimension-numbers; they hit HBM only in
+        # this CPU lowering.
+        return 0.0
+
+    # parameter name -> index; consumer counts per body value
+    param_idx: dict[str, int] = {}
+    consumers: dict[str, int] = {}
+    defs: dict[str, Op] = {}
+    for bop in body.ops:
+        defs[bop.name] = bop
+        if bop.opcode == "parameter":
+            m = re.search(r"parameter\((\d+)\)", bop.raw)
+            if m:
+                param_idx[bop.name] = int(m.group(1))
+        for o in bop.operands:
+            consumers[o] = consumers.get(o, 0) + 1
+
+    def resolve(name: str) -> str:
+        # Walk through dtype/layout casts to the producing value.
+        seen = 0
+        while (
+            name in defs
+            and defs[name].opcode in ("convert", "bitcast", "reshape", "copy")
+            and defs[name].operands
+            and seen < 8
+        ):
+            name = defs[name].operands[0]
+            seen += 1
+        return name
+
+    eff = dict(enumerate(in_full))
+    root_is_dus = False
+    dus_update_b = None
+    for bop in body.ops:
+        if bop.opcode == "dynamic-slice" and bop.operands:
+            src = resolve(bop.operands[0])
+            if src in param_idx and consumers.get(src, 0) == 1:
+                eff[param_idx[src]] = _shape_bytes(bop.type_str)
+        elif bop.opcode == "dynamic-update-slice" and bop.operands:
+            src = resolve(bop.operands[0])
+            upd = bop.operands[1] if len(bop.operands) > 1 else None
+            upd_b = _shape_bytes(body_syms.get(upd, "")) if upd else 0
+            if src in param_idx:
+                # In-place on TPU: the DUS path touches only the window;
+                # any sibling read of the same buffer is charged by its
+                # own consumer (e.g. the attention dot).
+                eff[param_idx[src]] = min(eff[param_idx[src]], upd_b)
+            # The fusion output is the (possibly converted) updated buffer:
+            # in-place on TPU, so the write is the update window only.
+            full_src_b = _shape_bytes(body_syms.get(src, ""))
+            if out_b >= 0.9 * full_src_b > 0:
+                root_is_dus = True
+                dus_update_b = upd_b
+    out_eff = dus_update_b if (root_is_dus and dus_update_b) else out_b
+    return out_eff + sum(eff.values())
+
+
+def analyze(text: str) -> HloCost:
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # Per-computation symbol tables (op name -> result type).
+    symbols = {c.name: {op.name: op.type_str for op in c.ops} for c in comps.values()}
+
+    # Multipliers via BFS over the call graph; fusion bodies tracked apart.
+    mult: dict[str, float] = defaultdict(float)
+    fusion_body: set[str] = set()
+    cost = HloCost(by_collective=defaultdict(float))
+
+    stack = [(entry.name, 1.0)]
+    seen_pairs = set()
+    while stack:
+        cname, m = stack.pop()
+        mult[cname] += m
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = cond = None
+                mm = re.search(r"body=%?([\w\.\-]+)", op.raw)
+                mc = re.search(r"condition=%?([\w\.\-]+)", op.raw)
+                if mm:
+                    body = mm.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trips = _trip_count(comps[cond]) if cond in comps else 1
+                cost.while_trips[body or op.name] = trips
+                if body:
+                    stack.append((body, m * trips))
+            elif op.opcode == "fusion":
+                mm = re.search(r"calls=%?([\w\.\-]+)", op.raw)
+                if mm:
+                    fusion_body.add(mm.group(1))
+                    stack.append((mm.group(1), m))
+            elif op.opcode in ("call", "conditional", "map", "reduce", "sort",
+                               "reduce-window", "scatter", "select-and-scatter",
+                               "all-reduce", "reduce-scatter"):
+                for target in _CALL_ATTR_RE.findall(op.raw):
+                    key = (target, m, op.name)
+                    if key not in seen_pairs:
+                        seen_pairs.add(key)
+                        if op.opcode in ("call", "conditional"):
+                            stack.append((target, m))
+                        # to_apply adders contribute negligible flops; skip.
+
+    def _score_like(type_str: str) -> bool:
+        # (B, H, [G,] q_chunk, S_k) attention-score blocks from the
+        # chunked-attention path: 4+D, q_chunk in {256, 512}, long K.
+        dims = _shape_dims(type_str)
+        return len(dims) >= 4 and dims[-2] in (256, 512) and dims[-1] >= 2048
+
+    # Now accumulate costs.
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        syms = symbols[cname]
+        in_fusion = cname in fusion_body
+        for op in comp.ops:
+            if op.opcode == "dot":
+                fl = m * _dot_flops(op, syms)
+                cost.flops += fl
+                cost.dot_count += 1
+                cost.top_flops.append((fl, op.name, cname))
+            elif op.opcode == "convolution":
+                cost.flops += m * _conv_flops(op, syms)
+            if in_fusion:
+                continue  # bytes & collectives counted at the call site
+            if op.opcode in _COLLECTIVES:
+                b = sum(_shape_bytes(syms.get(o, "")) for o in op.operands)
+                # XLA:CPU legalizes bf16 reductions by promoting to f32
+                # (marker: "...promoted" apply computation); on TPU the
+                # wire dtype stays bf16 — count the true width.
+                if "promoted" in op.raw:
+                    b //= 2
+                cost.collective_bytes += m * b
+                cost.by_collective[op.opcode] += m * b
+            if op.opcode in _SKIP_BYTES or op.opcode in _COLLECTIVES:
+                continue
+            out_b = _shape_bytes(op.type_str)
+            if op.opcode == "fusion":
+                b = _fusion_bytes(op, comps, symbols, syms)
+                cost.bytes += m * b
+                if _score_like(op.type_str):
+                    cost.attn_score_bytes += m * b
+                cost.top_bytes.append((m * b, f"fusion:{op.name}", cname))
+                continue
+            if op.opcode in ("dynamic-update-slice", "dynamic-slice", "gather", "scatter"):
+                # These touch only the slice/update window, not the whole
+                # operand (XLA aliases the big buffer in place): count the
+                # moved window twice (read + write).  For DUS the window is
+                # the update operand; for DS/gather it is the output.
+                if op.opcode == "dynamic-update-slice":
+                    win = _shape_bytes(syms.get(op.operands[1], "")) if len(op.operands) > 1 else out_b
+                elif op.opcode == "scatter":
+                    win = _shape_bytes(syms.get(op.operands[-1], "")) if op.operands else out_b
+                else:
+                    win = out_b
+                cost.bytes += m * 2 * win
+                cost.top_bytes.append((m * 2 * win, f"{op.opcode}:{op.name}", cname))
+                continue
+            in_b = sum(_shape_bytes(syms.get(o, "")) for o in op.operands)
+            cost.bytes += m * (out_b + in_b)
+            if _score_like(op.type_str) or (
+                op.opcode == "dot" and any(_score_like(syms.get(o, "")) for o in op.operands)
+            ):
+                cost.attn_score_bytes += m * (out_b + in_b)
+            cost.top_bytes.append((m * (out_b + in_b), f"{op.opcode}:{op.name}", cname))
+    cost.by_collective = dict(cost.by_collective)
+    cost.top_bytes = sorted(cost.top_bytes, reverse=True)[:20]
+    cost.top_flops = sorted(cost.top_flops, reverse=True)[:20]
+    return cost
+
+
+__all__ = ["analyze", "parse_hlo", "HloCost"]

@@ -1,0 +1,169 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Per (arch × shape × mesh) cell, derives the three roofline terms from the
+trip-count-corrected HLO cost (all per device, = per chip):
+
+    compute term    = HLO_FLOPs / peak_FLOPs           [s]
+    memory term     = HLO_bytes / HBM_bw               [s]
+    collective term = collective_bytes / link_bw       [s]
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (1 effective link per chip assumed — topology factors ignored, noted).
+
+Also reports MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) and the
+usefulness ratio MODEL_FLOPS / (HLO_FLOPs × chips) — remat and dispatch
+overheads push it below 1.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs import get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    tag: str
+    chips: int
+    compute_s: float
+    memory_s: float          # as lowered (jnp chunked attention: scores hit HBM)
+    memory_flash_s: float    # with the Pallas flash kernel (scores stay in VMEM)
+    collective_s: float
+    bottleneck: str          # classified on the flash path (the TPU hot path)
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    roofline_fraction: float  # compute_s / max(all terms) — 1.0 == compute-bound at peak
+    memory_gib: Optional[float]
+
+    def step_time_s(self) -> float:
+        """Lower-bound step time: terms assumed perfectly overlapped."""
+
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = next(s for s in cfg.shapes(include_skipped=True) if s.name == shape_name)
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_record(rec: dict) -> Optional[RooflineRow]:
+    if not rec.get("ok"):
+        return None
+    chips = rec["n_chips"]
+    hlo = rec["hlo_cost"]
+    flops_dev = hlo["flops"]
+    bytes_dev = hlo["bytes"]
+    score_dev = hlo.get("attn_score_bytes", 0.0)
+    coll_dev = hlo["collective_bytes"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    memory_flash_s = max(bytes_dev - score_dev, 0.0) / HBM_BW
+    coll_s = coll_dev / LINK_BW
+    terms = {"compute": compute_s, "memory": memory_flash_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = flops_dev * chips
+    mem = rec.get("memory", {}).get("total_bytes")
+    return RooflineRow(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        tag=rec.get("tag", ""),
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        memory_flash_s=memory_flash_s,
+        collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops=mf,
+        hlo_flops_global=hlo_global,
+        useful_ratio=mf / hlo_global if hlo_global else 0.0,
+        roofline_fraction=compute_s / max(max(terms.values()), 1e-30),
+        memory_gib=mem / 2**30 if mem else None,
+    )
+
+
+def load_rows(art_dir: str = "artifacts/dryrun", mesh: Optional[str] = "pod16x16",
+              tag: str = "") -> list[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("tag", "") != tag:
+            continue
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: list[RooflineRow]) -> str:
+    hdr = (
+        f"{'arch':18s} {'shape':12s} {'chips':>5s} {'compute_s':>10s} {'mem_s':>10s} "
+        f"{'mem_flash':>10s} {'collect_s':>10s} {'bound':>9s} {'MF/HLO':>7s} "
+        f"{'roofl%':>7s} {'GiB/dev':>8s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:18s} {r.shape:12s} {r.chips:5d} {r.compute_s:10.3e} "
+            f"{r.memory_s:10.3e} {r.memory_flash_s:10.3e} {r.collective_s:10.3e} "
+            f"{r.bottleneck:>9s} {r.useful_ratio:7.2f} {100*r.roofline_fraction:6.1f}% "
+            f"{r.memory_gib if r.memory_gib is not None else float('nan'):8.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args()
+    rows = load_rows(args.dir, args.mesh, args.tag)
+    print(format_table(rows))
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write(
+                "arch,shape,mesh,chips,compute_s,memory_s,memory_flash_s,"
+                "collective_s,bottleneck,model_flops,hlo_flops_global,"
+                "useful_ratio,roofline_fraction,memory_gib\n"
+            )
+            for r in rows:
+                f.write(
+                    f"{r.arch},{r.shape},{r.mesh},{r.chips},{r.compute_s},"
+                    f"{r.memory_s},{r.memory_flash_s},{r.collective_s},"
+                    f"{r.bottleneck},{r.model_flops},{r.hlo_flops_global},"
+                    f"{r.useful_ratio},{r.roofline_fraction},{r.memory_gib}\n"
+                )
+
+
+if __name__ == "__main__":
+    main()

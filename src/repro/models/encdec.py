@@ -1,0 +1,205 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model).  Pre-LN transformer with
+sinusoidal positions, MHA (no RoPE), GELU MLPs; the output projection is
+weight-tied to the decoder token embedding (as in Whisper).
+
+Decode: self-attention KV cache of ``seq_len`` plus cross-attention K/V
+computed once from the encoder output (``enc_frames`` positions).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import constrain_batch
+from repro.kernels import ops
+from repro.models import layers as L
+
+
+def _acfg(cfg: ArchConfig, causal: bool) -> L.AttnConfig:
+    return L.AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        d_head=cfg.head_dim,
+        causal=causal,
+        use_rope=False,
+    )
+
+
+def _init_enc_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 2)
+    d = cfg.d_model
+    z = lambda: jnp.zeros((d,), L.PARAM_DTYPE)
+    o = lambda: jnp.ones((d,), L.PARAM_DTYPE)
+    return {
+        "ln1_w": o(), "ln1_b": z(),
+        "attn": L.init_attention(ks[0], _acfg(cfg, causal=False)),
+        "ln2_w": o(), "ln2_b": z(),
+        "mlp": L.init_mlp(ks[1], d, cfg.d_ff),
+    }
+
+
+def _init_dec_block(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    z = lambda: jnp.zeros((d,), L.PARAM_DTYPE)
+    o = lambda: jnp.ones((d,), L.PARAM_DTYPE)
+    return {
+        "ln1_w": o(), "ln1_b": z(),
+        "attn": L.init_attention(ks[0], _acfg(cfg, causal=True)),
+        "lnx_w": o(), "lnx_b": z(),
+        "xattn": L.init_attention(ks[1], _acfg(cfg, causal=False)),
+        "xkv": L.init_cross_kv(ks[2], _acfg(cfg, causal=False)),
+        "ln2_w": o(), "ln2_b": z(),
+        "mlp": L.init_mlp(ks[3], d, cfg.d_ff),
+    }
+
+
+def init_encdec(key, cfg: ArchConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k1, cfg.enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    d = cfg.d_model
+    return {
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "embed": L.embed_init(k3, (cfg.vocab, d)),
+        "enc_ln_w": jnp.ones((d,), L.PARAM_DTYPE), "enc_ln_b": jnp.zeros((d,), L.PARAM_DTYPE),
+        "dec_ln_w": jnp.ones((d,), L.PARAM_DTYPE), "dec_ln_b": jnp.zeros((d,), L.PARAM_DTYPE),
+    }
+
+
+def _enc_layer(cfg: ArchConfig):
+    acfg = _acfg(cfg, causal=False)
+
+    def f(x, p):
+        x = constrain_batch(x)
+        h, _ = L.apply_attention(p["attn"], L.layer_norm(x, p["ln1_w"], p["ln1_b"]), acfg)
+        x = x + h
+        h = L.apply_mlp(p["mlp"], L.layer_norm(x, p["ln2_w"], p["ln2_b"]))
+        return x + h, None
+
+    return f
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: (B, S_enc, D) stub embeddings -> encoder states."""
+
+    s = frames.shape[1]
+    x = frames.astype(L.COMPUTE_DTYPE) + L.sinusoidal_positions(s, cfg.d_model).astype(
+        L.COMPUTE_DTYPE
+    )
+    body = jax.checkpoint(_enc_layer(cfg))
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.layer_norm(x, params["enc_ln_w"], params["enc_ln_b"])
+
+
+def _dec_layer(cfg: ArchConfig, enc_out):
+    acfg = _acfg(cfg, causal=True)
+    xcfg = _acfg(cfg, causal=False)
+
+    def f(x, p):
+        x = constrain_batch(x)
+        h, _ = L.apply_attention(p["attn"], L.layer_norm(x, p["ln1_w"], p["ln1_b"]), acfg)
+        x = x + h
+        ek, ev = L.encode_cross_kv(p["xkv"], enc_out, xcfg)
+        h = L.cross_attention(p["xattn"], L.layer_norm(x, p["lnx_w"], p["lnx_b"]), ek, ev, xcfg)
+        x = x + h
+        h = L.apply_mlp(p["mlp"], L.layer_norm(x, p["ln2_w"], p["ln2_b"]))
+        return x + h, None
+
+    return f
+
+
+def forward_encdec(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    """batch: {"frames": (B,Se,D), "tokens": (B,Sd)} -> logits (B,Sd,V)."""
+
+    enc_out = encode(params, cfg, batch["frames"])
+    tokens = batch["tokens"]
+    s = tokens.shape[1]
+    x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    x = x + L.sinusoidal_positions(s, cfg.d_model).astype(L.COMPUTE_DTYPE)
+    body = _dec_layer(cfg, enc_out)
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.layer_norm(x, params["dec_ln_w"], params["dec_ln_b"])
+    logits = ops.gemm(x, params["embed"].T.astype(L.COMPUTE_DTYPE))  # tied head
+    return constrain_batch(logits, extra=("model",)), jnp.float32(0)
+
+
+def init_decode_state(params_or_none, cfg: ArchConfig, batch: int, seq_len: int):
+    """Self-attention cache + precomputed cross K/V (abstract-friendly)."""
+
+    ll = cfg.n_layers
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((ll, batch, seq_len, hkv, dh), L.COMPUTE_DTYPE),
+        "v": jnp.zeros((ll, batch, seq_len, hkv, dh), L.COMPUTE_DTYPE),
+        "cross_k": jnp.zeros((ll, batch, cfg.enc_frames, hkv, dh), L.COMPUTE_DTYPE),
+        "cross_v": jnp.zeros((ll, batch, cfg.enc_frames, hkv, dh), L.COMPUTE_DTYPE),
+    }
+
+
+def decode_step(params, cfg: ArchConfig, batch, state, pos):
+    """One decoder token against self cache + fixed cross K/V."""
+
+    tokens = batch["tokens"]  # (B,1)
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
+    # Sinusoid at a single (traced) position — avoids a (S, D) HLO constant.
+    d = cfg.d_model
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+    pe = jnp.zeros((d,), jnp.float32).at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+    x = x + pe[None, None].astype(L.COMPUTE_DTYPE)
+    acfg = _acfg(cfg, causal=True)
+    xcfg = _acfg(cfg, causal=False)
+
+    def body(x, inputs):
+        p, ck, cv, xk, xv = inputs
+        h, (ck, cv) = L.decode_attention(
+            p["attn"], L.layer_norm(x, p["ln1_w"], p["ln1_b"]), acfg, ck, cv, pos
+        )
+        x = x + h
+        h = L.cross_attention(
+            p["xattn"], L.layer_norm(x, p["lnx_w"], p["lnx_b"]), xk, xv, xcfg
+        )
+        x = x + h
+        h = L.apply_mlp(p["mlp"], L.layer_norm(x, p["ln2_w"], p["ln2_b"]))
+        return x + h, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"], state["k"], state["v"], state["cross_k"], state["cross_v"]),
+    )
+    x = L.layer_norm(x, params["dec_ln_w"], params["dec_ln_b"])
+    logits = ops.gemm(x, params["embed"].T.astype(L.COMPUTE_DTYPE))
+    new_state = dict(state)
+    new_state.update({"k": ks, "v": vs})
+    return logits, new_state
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    from repro.models.transformer import cross_entropy
+
+    logits, aux = forward_encdec(params, cfg, batch, remat=remat)
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+__all__ = [
+    "init_encdec",
+    "encode",
+    "forward_encdec",
+    "decode_step",
+    "init_decode_state",
+    "loss_fn",
+]

@@ -1,0 +1,363 @@
+"""Shared neural-net layers (pure-functional, explicit param pytrees).
+
+Conventions:
+  * params are stored fp32 (master weights); compute casts to bf16 at the
+    point of use (mixed-precision policy),
+  * normalizations and softmax run in fp32,
+  * every dense projection routes through :func:`repro.kernels.ops.gemm`
+    so the paper's control-tree block configuration governs the hot loops,
+  * attention is *chunked over queries* (scores never materialize more than
+    ``q_chunk × S_k``), which together with layer remat bounds activation
+    memory — see EXPERIMENTS.md §Perf for the measured effect.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=PARAM_DTYPE):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=PARAM_DTYPE):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Normalization
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (half-rotation / LLaMA convention)
+# ---------------------------------------------------------------------------
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: (..., S) int32."""
+
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    scale: Optional[float] = None,
+):
+    """GQA-native attention, chunked over queries (scores ≤ q_chunk × S_k).
+
+    q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D) with Hq % Hkv == 0.  Grouped
+    einsums keep the KV-head dim explicit — repeating KV heads materializes
+    a G×-larger tensor and (sharded) triggers involuntary SPMD
+    rematerialization, measured at +115 GiB/device on mixtral decode
+    (EXPERIMENTS.md §Perf).  The q-offset convention assumes queries are
+    the *suffix* of the key sequence.
+    """
+
+    b, sq, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    q_chunk = min(q_chunk, sq)
+    pad = (-sq) % q_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    n_chunks = qp.shape[1] // q_chunk
+
+    kT = k.transpose(0, 2, 3, 1).astype(COMPUTE_DTYPE)  # (B,Hkv,D,Sk)
+    vT = v.transpose(0, 2, 1, 3).astype(COMPUTE_DTYPE)  # (B,Hkv,Sk,D)
+
+    # Sliding-window block skipping (paper-style iteration-space
+    # restriction): a q-chunk can only attend to the trailing
+    # ``q_chunk + window`` keys, so slice K/V instead of masking the full
+    # row — an Sk/(q_chunk+window) FLOP and score-traffic reduction
+    # (8.6× on mixtral prefill_32k; EXPERIMENTS.md §Perf B).
+    span = sk
+    if window is not None and causal:
+        span = min(sk, q_chunk + window)
+
+    def one_chunk(i):
+        qc = jax.lax.dynamic_slice_in_dim(qp, i * q_chunk, q_chunk, axis=1)
+        qc = qc.reshape(b, q_chunk, hkv, g, d).transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,qc,D)
+        qc = qc.astype(COMPUTE_DTYPE)
+        q_idx = (sk - sq) + i * q_chunk + jnp.arange(q_chunk)
+        if span < sk:
+            start = jnp.clip((sk - sq) + i * q_chunk + q_chunk - span, 0, sk - span)
+            kc = jax.lax.dynamic_slice_in_dim(kT, start, span, axis=3)
+            vc = jax.lax.dynamic_slice_in_dim(vT, start, span, axis=2)
+            k_idx = start + jnp.arange(span)
+        else:
+            kc, vc = kT, vT
+            k_idx = jnp.arange(sk)
+        s = jnp.einsum("bhgqd,bhds->bhgqs", qc, kc, preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = jnp.ones((q_chunk, span), bool)
+        if causal:
+            mask &= q_idx[:, None] >= k_idx[None, :]
+        if window is not None:
+            mask &= (q_idx[:, None] - k_idx[None, :]) < window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DTYPE)
+        o = jnp.einsum("bhgqs,bhsd->bhgqd", p, vc, preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    out = jax.lax.map(one_chunk, jnp.arange(n_chunks))  # (n,B,Hkv,G,qc,D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, n_chunks * q_chunk, hq, d)
+    return out[:, :sq]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None      # sliding-window attention (Mixtral)
+    causal: bool = True
+    use_rope: bool = True
+
+
+def init_attention(key, cfg: AttnConfig):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads * cfg.d_head)),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+        "wo": dense_init(ks[3], (cfg.n_heads * cfg.d_head, cfg.d_model)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * cfg.d_head,), PARAM_DTYPE)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), PARAM_DTYPE)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * cfg.d_head,), PARAM_DTYPE)
+    return p
+
+
+def _qkv(p, x, cfg: AttnConfig, positions):
+    b, s, _ = x.shape
+    c = lambda w: w.astype(COMPUTE_DTYPE)
+    q = ops.linear(x, c(p["wq"]), p.get("bq"))
+    k = ops.linear(x, c(p["wk"]), p.get("bk"))
+    v = ops.linear(x, c(p["wv"]), p.get("bv"))
+    q = q.reshape(b, s, cfg.n_heads, cfg.d_head)
+    k = k.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = v.reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_attention(p, x, cfg: AttnConfig, *, positions=None):
+    """Full-sequence attention (training / prefill). x: (B,S,D)."""
+
+    from repro.distributed.sharding import constrain_qkv_context_parallel
+
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _qkv(p, x, cfg, positions)
+    q, k, v = constrain_qkv_context_parallel(q, k, v, cfg.n_heads)
+    o = chunked_attention(q, k, v, causal=cfg.causal, window=cfg.window)
+    o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return ops.linear(o, p["wo"].astype(COMPUTE_DTYPE)), (k, v)
+
+
+def decode_attention(p, x, cfg: AttnConfig, cache_k, cache_v, pos):
+    """Single-token decode against a (ring or linear) KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, S_cache, Hkv, Dh); pos: scalar int32 —
+    the absolute position of the new token (same across the batch, static
+    batching).  With a sliding window the cache is a ring buffer of size
+    ``window`` and ``pos`` indexes modulo the window.
+    """
+
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions)
+
+    slot = pos % s_cache if cfg.window is not None else pos
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+
+    # GQA-native grouped einsum over the raw cache — no KV repetition.
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, 1, cfg.n_kv_heads, g, cfg.d_head).astype(COMPUTE_DTYPE)
+    s = jnp.einsum(
+        "bqhgd,bshd->bhgqs", qg, cache_k.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    ) / np.sqrt(cfg.d_head)
+    k_idx = jnp.arange(s_cache)
+    if cfg.window is not None:
+        valid = (k_idx <= slot) | (pos >= s_cache)  # ring buffer: all slots valid once wrapped
+    else:
+        valid = k_idx <= pos
+    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+    pattn = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DTYPE)
+    o = jnp.einsum(
+        "bhgqs,bshd->bqhgd", pattn, cache_v.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+    o = o.astype(x.dtype).reshape(b, 1, cfg.n_heads * cfg.d_head)
+    return ops.linear(o, p["wo"].astype(COMPUTE_DTYPE)), (cache_k, cache_v)
+
+
+def cross_attention(p, x, enc_k, enc_v, cfg: AttnConfig):
+    """Decoder→encoder attention (Whisper). enc_k/v precomputed (B,Se,Hkv,Dh)."""
+
+    b, s, _ = x.shape
+    c = lambda w: w.astype(COMPUTE_DTYPE)
+    q = ops.linear(x, c(p["wq"]), p.get("bq")).reshape(b, s, cfg.n_heads, cfg.d_head)
+    o = chunked_attention(
+        q, enc_k.astype(COMPUTE_DTYPE), enc_v.astype(COMPUTE_DTYPE), causal=False
+    )
+    o = o.reshape(b, s, cfg.n_heads * cfg.d_head)
+    return ops.linear(o, p["wo"].astype(COMPUTE_DTYPE))
+
+
+def init_cross_kv(key, cfg: AttnConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "wk": dense_init(ks[0], (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+        "wv": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * cfg.d_head)),
+    }
+
+
+def encode_cross_kv(p, enc_out, cfg: AttnConfig):
+    b, s, _ = enc_out.shape
+    c = lambda w: w.astype(COMPUTE_DTYPE)
+    k = ops.linear(enc_out, c(p["wk"])).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    v = ops.linear(enc_out, c(p["wv"])).reshape(b, s, cfg.n_kv_heads, cfg.d_head)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_glu(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(ks[0], (d_model, d_ff)),
+        "w3": dense_init(ks[1], (d_model, d_ff)),
+        "w2": dense_init(ks[2], (d_ff, d_model)),
+    }
+
+
+def apply_glu(p, x):
+    c = lambda w: w.astype(COMPUTE_DTYPE)
+    h = jax.nn.silu(ops.gemm(x, c(p["w1"])).astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    h = h * ops.gemm(x, c(p["w3"]))
+    return ops.gemm(h, c(p["w2"]))
+
+
+def init_mlp(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 2)
+    return {
+        "w1": dense_init(ks[0], (d_model, d_ff)),
+        "b1": jnp.zeros((d_ff,), PARAM_DTYPE),
+        "w2": dense_init(ks[1], (d_ff, d_model)),
+        "b2": jnp.zeros((d_model,), PARAM_DTYPE),
+    }
+
+
+def apply_mlp(p, x):
+    c = lambda w: w.astype(COMPUTE_DTYPE)
+    h = ops.linear(x, c(p["w1"]), p["b1"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return ops.linear(h, c(p["w2"]), p["b2"])
+
+
+def sinusoidal_positions(s: int, d: int):
+    pos = np.arange(s)[:, None]
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((s, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+__all__ = [
+    "COMPUTE_DTYPE",
+    "PARAM_DTYPE",
+    "AttnConfig",
+    "dense_init",
+    "embed_init",
+    "rms_norm",
+    "layer_norm",
+    "rope",
+    "repeat_kv",
+    "chunked_attention",
+    "init_attention",
+    "apply_attention",
+    "decode_attention",
+    "cross_attention",
+    "init_cross_kv",
+    "encode_cross_kv",
+    "init_glu",
+    "apply_glu",
+    "init_mlp",
+    "apply_mlp",
+    "sinusoidal_positions",
+]

@@ -1,0 +1,98 @@
+"""Family dispatch: one uniform API over all ten architectures.
+
+  * ``init_params(key, cfg)``
+  * ``make_loss_fn(cfg)``        -> (params, batch) -> (loss, metrics)
+  * ``make_prefill_fn(cfg)``     -> (params, batch) -> logits
+  * ``make_decode_fn(cfg)``      -> (params, batch, state, pos) -> (logits, state)
+  * ``init_decode_state(cfg, batch, seq_len)``
+  * ``batch_spec(cfg, shape)``   -> ShapeDtypeStruct inputs for that cell
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeSpec
+from repro.models import encdec as E
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+def init_params(key, cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return E.init_encdec(key, cfg)
+    return T.init_lm(key, cfg)
+
+
+def make_loss_fn(cfg: ArchConfig, *, remat: bool = True):
+    if cfg.family == "encdec":
+        def f(params, batch):
+            return E.loss_fn(params, cfg, batch, remat=remat)
+    else:
+        def f(params, batch):
+            return T.loss_fn(params, cfg, batch, remat=remat)
+    return f
+
+
+def make_prefill_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        def f(params, batch):
+            return E.forward_encdec(params, cfg, batch, remat=False)[0]
+    else:
+        def f(params, batch):
+            return T.prefill(params, cfg, batch)
+    return f
+
+
+def make_decode_fn(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        def f(params, batch, state, pos):
+            return E.decode_step(params, cfg, batch, state, pos)
+    else:
+        def f(params, batch, state, pos):
+            return T.decode_step(params, cfg, batch, state, pos)
+    return f
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int):
+    if cfg.family == "encdec":
+        return E.init_decode_state(None, cfg, batch, seq_len)
+    return T.init_decode_state(cfg, batch, seq_len)
+
+
+def batch_spec(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct inputs for one (arch × shape) cell."""
+
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda ss: jax.ShapeDtypeStruct((b, ss), jnp.int32)
+    emb = lambda ss: jax.ShapeDtypeStruct((b, ss, cfg.d_model), L.COMPUTE_DTYPE)
+
+    if shape.kind == "decode":
+        batch = {"embeds": emb(1)} if cfg.embed_inputs else {"tokens": tok(1)}
+        return batch
+
+    if cfg.family == "encdec":
+        out = {"frames": emb(s), "tokens": tok(s)}
+    elif cfg.embed_inputs:
+        out = {"embeds": emb(s)}
+    else:
+        out = {"tokens": tok(s)}
+    if shape.kind == "train":
+        out["labels"] = tok(s)
+    return out
+
+
+def decode_state_spec(cfg: ArchConfig, batch: int, seq_len: int):
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, seq_len))
+
+
+__all__ = [
+    "init_params",
+    "make_loss_fn",
+    "make_prefill_fn",
+    "make_decode_fn",
+    "init_decode_state",
+    "decode_state_spec",
+    "batch_spec",
+]

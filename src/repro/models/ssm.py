@@ -1,0 +1,240 @@
+"""Mamba2 (state-space duality) blocks — training (chunked) and decode.
+
+The SSD chunked algorithm [arXiv:2405.21060] is itself a blocked
+decomposition of a structured matmul: within-chunk terms are dense
+(Q×Q masked GEMMs on the MXU), across-chunk terms ride a recurrent state —
+the same "block to fit fast memory, stream the reduction" structure the
+paper applies to GEMM.  Chunks are processed with ``lax.scan`` so the
+working set stays bounded at ``chunk × chunk`` per head group.
+
+Decode is the dual recurrent form: constant-size state
+``(B, H, d_state, headdim)`` per layer, no KV cache — which is why the
+``long_500k`` shape runs for the SSM/hybrid architectures.
+
+Sharding note: the reference Mamba2 fuses z/x/B/C/dt into one in_proj; we
+keep them as separate projections (mathematically identical) so each output
+dim TP-shards cleanly — z/x/dt split over heads ("model" axis), B/C
+replicated (they are per-group, G=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128
+    headdim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 256
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+
+def init_mamba2(key, cfg: SSMConfig):
+    ks = jax.random.split(key, 6)
+    gn2 = 2 * cfg.n_groups * cfg.d_state
+    return {
+        "wz": L.dense_init(ks[0], (cfg.d_model, cfg.d_inner)),
+        "wx": L.dense_init(ks[1], (cfg.d_model, cfg.d_inner)),
+        "wbc": L.dense_init(ks[2], (cfg.d_model, gn2)),
+        "wdt": L.dense_init(ks[3], (cfg.d_model, cfg.n_heads), scale=0.02),
+        "conv_w_x": L.dense_init(ks[4], (cfg.d_conv, cfg.d_inner), scale=0.5),
+        "conv_b_x": jnp.zeros((cfg.d_inner,), L.PARAM_DTYPE),
+        "conv_w_bc": L.dense_init(ks[4], (cfg.d_conv, gn2), scale=0.5),
+        "conv_b_bc": jnp.zeros((gn2,), L.PARAM_DTYPE),
+        "dt_bias": jnp.zeros((cfg.n_heads,), L.PARAM_DTYPE),
+        "A_log": jnp.zeros((cfg.n_heads,), L.PARAM_DTYPE),
+        "D": jnp.ones((cfg.n_heads,), L.PARAM_DTYPE),
+        "norm_w": jnp.ones((cfg.d_inner,), L.PARAM_DTYPE),
+        "out_proj": L.dense_init(ks[5], (cfg.d_inner, cfg.d_model)),
+    }
+
+
+def _causal_conv(u, w, b, d_conv: int, conv_state=None):
+    """Depthwise causal conv + SiLU. u: (B, S, C); w: (K, C)."""
+
+    if conv_state is not None:  # decode: (B, K-1, C) history
+        window = jnp.concatenate([conv_state, u], axis=1)  # (B, K, C)
+        out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32))
+        out = jax.nn.silu(out + b.astype(jnp.float32))
+        return out[:, None].astype(u.dtype), window[:, 1:]
+    pad = jnp.pad(u, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    stacked = jnp.stack([pad[:, i : i + u.shape[1]] for i in range(d_conv)], axis=2)
+    out = jnp.einsum("bskc,kc->bsc", stacked.astype(jnp.float32), w.astype(jnp.float32))
+    out = jax.nn.silu(out + b.astype(jnp.float32))
+    return out.astype(u.dtype), None
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, cfg: SSMConfig, init_state=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); A: (H,) negative rates;
+    Bm, Cm: (B,S,G,N).  Returns (y, final_state) with state (B,H,N,P) fp32.
+    """
+
+    b, s, h, p = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(cfg.chunk, s)
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+    rep = h // g
+
+    xq = x.reshape(b, nc, q, h, p)
+    dtq = dt.reshape(b, nc, q, h)
+    bq = Bm.reshape(b, nc, q, g, n)
+    cq = Cm.reshape(b, nc, q, g, n)
+
+    # log decay per step: dA = A * dt  (A < 0)
+    da = (A[None, None, None, :] * dtq).astype(jnp.float32)     # (B,nc,Q,H)
+    cum = jnp.cumsum(da, axis=2)                                 # l_t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]          # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: scores[t,s] = (C_t · B_s) * exp(l_t - l_s) * dt_s
+    cb = jnp.einsum("bcqgn,bcsgn->bcqsg", cq.astype(jnp.float32), bq.astype(jnp.float32))
+    cb_h = jnp.broadcast_to(cb[..., None], (b, nc, q, q, g, rep)).reshape(b, nc, q, q, h)
+    scores = cb_h * decay * dtq[:, :, None, :, :]                # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcqsh,bcshp->bcqhp", scores, xq.astype(jnp.float32))
+
+    # per-chunk state contribution: sum_s exp(l_Q - l_s) dt_s B_s ⊗ x_s
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)                      # (B,nc,Q,H)
+    w = tail * dtq
+    bqh = jnp.broadcast_to(bq[:, :, :, :, None, :], (b, nc, q, g, rep, n)).reshape(
+        b, nc, q, h, n
+    )
+    chunk_state = jnp.einsum(
+        "bcqhn,bcqhp->bchnp", bqh.astype(jnp.float32) * w[..., None], xq.astype(jnp.float32)
+    )                                                            # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    cqh = jnp.broadcast_to(cq[:, :, :, :, None, :], (b, nc, q, g, rep, n)).reshape(
+        b, nc, q, h, n
+    )
+
+    def scan_fn(hstate, inputs):
+        cs, cd, c_h, l_t = inputs  # (B,H,N,P), (B,H), (B,Q,H,N), (B,Q,H)
+        y_int = jnp.einsum("bqhn,bhnp->bqhp", c_h * jnp.exp(l_t)[..., None], hstate)
+        hstate = cd[..., None, None] * hstate + cs
+        return hstate, y_int
+
+    h0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+    xs = (
+        chunk_state.transpose(1, 0, 2, 3, 4),
+        chunk_decay.transpose(1, 0, 2),
+        cqh.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+        cum.transpose(1, 0, 2, 3),
+    )
+    final, y_inter = jax.lax.scan(scan_fn, h0, xs)
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)                   # (B,nc,Q,H,P)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def _project(p, xin, cfg: SSMConfig):
+    c = lambda w: w.astype(L.COMPUTE_DTYPE)
+    xc = xin.astype(L.COMPUTE_DTYPE)
+    z = jnp.einsum("bsd,de->bse", xc, c(p["wz"]))
+    xu = jnp.einsum("bsd,de->bse", xc, c(p["wx"]))
+    bc = jnp.einsum("bsd,de->bse", xc, c(p["wbc"]))
+    dt = jnp.einsum("bsd,dh->bsh", xc, c(p["wdt"]))
+    return z, xu, bc, dt
+
+
+def _finalize(p, y, z, xin, cfg: SSMConfig):
+    b, s = xin.shape[0], xin.shape[1]
+    y = y.reshape(b, s, cfg.d_inner).astype(L.COMPUTE_DTYPE)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(L.COMPUTE_DTYPE)
+    y = L.rms_norm(y, p["norm_w"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(L.COMPUTE_DTYPE))
+    return out.astype(xin.dtype)
+
+
+def apply_mamba2(p, xin, cfg: SSMConfig, *, init_state=None):
+    """Full-sequence Mamba2 block. xin: (B,S,D) -> (y, final_ssm_state)."""
+
+    z, xu, bc, dt = _project(p, xin, cfg)
+    xu, _ = _causal_conv(xu, p["conv_w_x"], p["conv_b_x"], cfg.d_conv)
+    bc, _ = _causal_conv(bc, p["conv_w_bc"], p["conv_b_bc"], cfg.d_conv)
+    b, s, _ = xu.shape
+    gn = cfg.n_groups * cfg.d_state
+    x = xu.reshape(b, s, cfg.n_heads, cfg.headdim)
+    Bm = bc[..., :gn].reshape(b, s, cfg.n_groups, cfg.d_state)
+    Cm = bc[..., gn:].reshape(b, s, cfg.n_groups, cfg.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    y, final = _ssd_chunked(x, dtv, A, Bm, Cm, cfg, init_state=init_state)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * x.astype(jnp.float32)
+    return _finalize(p, y, z, xin, cfg), final
+
+
+def init_mamba2_state(batch: int, cfg: SSMConfig, dtype=jnp.float32):
+    gn2 = 2 * cfg.n_groups * cfg.d_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.headdim), dtype),
+        "conv_x": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), L.COMPUTE_DTYPE),
+        "conv_bc": jnp.zeros((batch, cfg.d_conv - 1, gn2), L.COMPUTE_DTYPE),
+    }
+
+
+def decode_mamba2(p, xin, cfg: SSMConfig, state):
+    """Single-token recurrent step. xin: (B,1,D); state from init_mamba2_state."""
+
+    z, xu, bc, dt = _project(p, xin, cfg)
+    xu, conv_x = _causal_conv(
+        xu, p["conv_w_x"], p["conv_b_x"], cfg.d_conv, conv_state=state["conv_x"]
+    )
+    bc, conv_bc = _causal_conv(
+        bc, p["conv_w_bc"], p["conv_b_bc"], cfg.d_conv, conv_state=state["conv_bc"]
+    )
+    b = xin.shape[0]
+    gn = cfg.n_groups * cfg.d_state
+    x = xu[:, 0].reshape(b, cfg.n_heads, cfg.headdim)
+    Bm = bc[:, 0, :gn].reshape(b, cfg.n_groups, cfg.d_state)
+    Cm = bc[:, 0, gn:].reshape(b, cfg.n_groups, cfg.d_state)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    rep = cfg.n_heads // cfg.n_groups
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)          # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    decay = jnp.exp(A[None] * dtv)                                # (B,H)
+    h = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bh * dtv[..., None], x.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, h)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * x.astype(jnp.float32)
+    y = y[:, None]  # (B,1,H,P)
+    out = _finalize(p, y, z, xin, cfg)
+    return out, {"ssm": h, "conv_x": conv_x, "conv_bc": conv_bc}
+
+
+__all__ = [
+    "SSMConfig",
+    "init_mamba2",
+    "apply_mamba2",
+    "decode_mamba2",
+    "init_mamba2_state",
+]

@@ -1,0 +1,143 @@
+"""AdamW with learning-rate schedules, global-norm clipping, and
+micro-batch gradient accumulation — pure pytree transforms, no deps.
+
+State layout mirrors param sharding (the trainer shards ``m``/``v`` with
+the same PartitionSpecs as their parameters, ZeRO-style when FSDP mode is
+on), so optimizer memory scales down with the data axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"  # cosine | linear | constant
+
+
+def lr_at(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+
+    step = state["step"] + 1
+    grad_norm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        # Decoupled weight decay on matrices only (ndim >= 2).
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newp = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + wd * p)
+        return newp.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return (
+        new_p,
+        {"m": new_m, "v": new_v, "step": step},
+        {"lr": lr, "grad_norm": grad_norm},
+    )
+
+
+def accumulate_gradients(loss_fn: Callable, params, batch, n_micro: int):
+    """Scan over micro-batches; returns (mean_loss, metrics, mean_grads).
+
+    Batch tensors are split along axis 0; ``n_micro`` must divide the
+    (per-shard) batch.  Accumulation is fp32.
+    """
+
+    if n_micro <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(acc, mb):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc_g, acc_l = acc
+        acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+        return (acc_g, acc_l + loss), metrics
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (acc_g, acc_l), metrics = jax.lax.scan(body, (zero_g, jnp.float32(0)), micro)
+    grads = jax.tree.map(lambda g: g / n_micro, acc_g)
+    metrics = jax.tree.map(lambda x: x[-1], metrics)
+    return acc_l / n_micro, metrics, grads
+
+
+__all__ = [
+    "AdamWConfig",
+    "lr_at",
+    "init_opt_state",
+    "adamw_update",
+    "accumulate_gradients",
+    "global_norm",
+    "clip_by_global_norm",
+]

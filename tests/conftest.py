@@ -1,0 +1,23 @@
+import os
+
+# Tests run on the single host CPU device; the dry-run (and only the
+# dry-run) forces 512 placeholder devices in its own subprocess.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from repro.distributed import sharding as SH  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _clear_activation_mesh():
+    """Keep the global activation-constraint mesh from leaking across tests."""
+
+    yield
+    SH.use_mesh_for_activations(None)
+
+
+@pytest.fixture
+def rng():
+    return jax.random.PRNGKey(0)

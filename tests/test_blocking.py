@@ -1,0 +1,74 @@
+"""Unit tests for the cache/VMEM blocking derivations (paper Section 3.3)."""
+
+import pytest
+
+from repro.core import blocking as B
+
+
+class TestGotoDerivation:
+    def test_a15_kc_matches_paper(self):
+        # Paper's empirical optimum: k_c = 952.  The analytic L1 bound
+        # lands within 5 %.
+        d = B.derive_goto_blocking(B.CORTEX_A15)
+        assert abs(d.kc - 952) / 952 < 0.05
+
+    def test_a15_mc_order_of_paper(self):
+        d = B.derive_goto_blocking(B.CORTEX_A15)
+        assert 100 <= d.mc <= 220  # paper: 152
+
+    def test_paper_values_satisfy_capacity(self):
+        # The published optima must fit the caches they were tuned for.
+        for cache, cfg in [(B.CORTEX_A15, B.PAPER_A15), (B.CORTEX_A7, B.PAPER_A7)]:
+            assert cfg.b_micropanel_bytes() <= cache.l1_bytes
+            assert cfg.a_panel_bytes() <= cache.l2_bytes
+
+    def test_shared_kc_shrinks_mc(self):
+        # Section 5.3: shared k_c = 952 forces the A7's m_c down
+        # (paper finds 32; analytic bound must agree it is << 80).
+        d = B.derive_goto_blocking(B.CORTEX_A7, shared_kc=952)
+        assert d.kc == 952
+        assert d.mc < B.PAPER_A7.mc
+        assert B.GotoBlocking(mc=32, kc=952, nc=4096).a_panel_bytes() <= B.CORTEX_A7.l2_bytes
+
+    def test_nc_without_l3(self):
+        assert B.derive_goto_blocking(B.CORTEX_A15).nc == 4096
+
+    def test_bigger_l2_bigger_mc(self):
+        a15 = B.derive_goto_blocking(B.CORTEX_A15)
+        a7 = B.derive_goto_blocking(B.CORTEX_A7)
+        assert a15.mc > a7.mc
+
+
+class TestTpuDerivation:
+    def test_fits_vmem(self):
+        cfg = B.derive_block_config(4096, 4096, 4096)
+        assert cfg.fits(B.TPU_V5E)
+
+    def test_mxu_alignment(self):
+        cfg = B.derive_block_config(4096, 8192, 4096)
+        assert cfg.bm % 128 == 0 and cfg.bn % 128 == 0 and cfg.bk % 128 == 0
+
+    def test_small_problem_clamps(self):
+        cfg = B.derive_block_config(64, 64, 64)
+        assert cfg.bm == 128 and cfg.bn == 128  # min MXU tile
+
+    def test_smaller_vmem_smaller_blocks(self):
+        small = B.TpuCoreSpec(vmem_bytes=4 * 1024 * 1024)
+        big_cfg = B.derive_block_config(4096, 4096, 4096)
+        small_cfg = B.derive_block_config(4096, 4096, 4096, spec=small)
+        assert small_cfg.vmem_bytes() < big_cfg.vmem_bytes()
+        assert small_cfg.vmem_bytes() <= small.vmem_bytes * small.vmem_fill
+
+    def test_intensity_monotone_in_block(self):
+        a = B.BlockConfig(bm=256, bk=512, bn=256)
+        b = B.BlockConfig(bm=128, bk=512, bn=128)
+        assert a.arithmetic_intensity() > b.arithmetic_intensity()
+
+    def test_pad_to_blocks(self):
+        cfg = B.BlockConfig(bm=128, bk=256, bn=128)
+        assert B.pad_to_blocks(130, 300, 127, cfg) == (256, 512, 128)
+
+    def test_search_grid_all_fit(self):
+        for cfg in B.search_grid(coarse=True):
+            assert cfg.fits(B.TPU_V5E)
+        assert len(B.search_grid(coarse=False)) > len(B.search_grid(coarse=True))

@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocking as B
+from repro.core import schedule as S
+from repro.core.asymmetric import AsymmetricMesh, DeviceClass
+
+
+# ---------------------------------------------------------------------------
+# Partitioners: exact coverage, proportionality, alignment
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 100000),
+    k=st.integers(1, 8),
+)
+@settings(max_examples=200, deadline=None)
+def test_sss_exact_coverage(n, k):
+    t = S.sss_partition(n, k)
+    t.validate()
+    assert sum(t.sizes()) == n
+
+
+@given(
+    n=st.integers(1, 100000),
+    ratios=st.lists(st.floats(0.01, 100.0), min_size=1, max_size=6),
+)
+@settings(max_examples=200, deadline=None)
+def test_sas_exact_coverage(n, ratios):
+    t = S.sas_partition(n, ratios)
+    t.validate()
+    assert sum(t.sizes()) == n
+
+
+@given(
+    n=st.integers(1, 50000),
+    data=st.data(),
+)
+@settings(max_examples=200, deadline=None)
+def test_ca_sas_alignment_and_coverage(n, data):
+    k = data.draw(st.integers(1, 4))
+    ratios = data.draw(st.lists(st.floats(0.1, 20.0), min_size=k, max_size=k))
+    tiles = data.draw(st.lists(st.integers(1, 256), min_size=k, max_size=k))
+    t = S.ca_sas_partition(n, ratios, tiles)
+    t.validate()
+    sizes = t.sizes()
+    assert sum(sizes) == n
+    # Alignment holds unless a tile exceeds its class's proportional share
+    # (the documented partial-panel fallback).
+    raw = S.sas_partition(n, ratios).sizes()
+    feasible = all(tl <= max(r, 1) for tl, r in zip(tiles, raw) if r > 0)
+    if feasible:
+        sink = int(np.argmin(tiles))
+        for i, (sz, tile) in enumerate(zip(sizes, tiles)):
+            if i != sink and sz > 0:
+                assert sz % tile == 0, f"class {i} size {sz} not aligned to {tile}"
+
+
+@given(
+    n=st.integers(0, 200000),
+    r=st.floats(0.5, 16.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_sas_monotone_in_ratio(n, r):
+    """More ratio -> the fast class never gets less work."""
+
+    lo = S.sas_partition(max(n, 1), [r, 1.0]).sizes()[0]
+    hi = S.sas_partition(max(n, 1), [r * 1.5, 1.0]).sizes()[0]
+    assert hi >= lo
+
+
+@given(
+    n=st.integers(1, 20000),
+    rates=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=4),
+)
+@settings(max_examples=100, deadline=None)
+def test_das_coverage_and_busy_consistency(n, rates):
+    strides = [max(1, int(10 * r)) for r in rates]
+    res = S.das_schedule(n, rates, strides)
+    assert sum(res.sizes()) == n
+    assert res.makespan >= max(res.busy) * 0.999
+    # makespan equals some class's busy time (the last finisher)
+    assert any(abs(res.makespan - b) < 1e-9 for b in res.busy)
+
+
+@given(
+    n=st.integers(2, 10000),
+    fast=st.floats(1.5, 20.0),
+)
+@settings(max_examples=100, deadline=None)
+def test_das_fast_class_gets_more(n, fast):
+    res = S.das_schedule(n, [fast, 1.0], [8, 8])
+    s = res.sizes()
+    assert s[0] >= s[1] - 8  # within one chunk granule
+
+
+# ---------------------------------------------------------------------------
+# Blocking: VMEM capacity invariant over the whole search space
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 65536),
+    k=st.integers(1, 65536),
+    n=st.integers(1, 65536),
+    vmem_mb=st.sampled_from([4, 8, 16, 32]),
+)
+@settings(max_examples=150, deadline=None)
+def test_derived_blocks_always_fit(m, k, n, vmem_mb):
+    spec = B.TpuCoreSpec(vmem_bytes=vmem_mb * 1024 * 1024)
+    cfg = B.derive_block_config(m, k, n, spec=spec)
+    assert cfg.vmem_bytes() <= spec.vmem_bytes * spec.vmem_fill
+    assert cfg.bm % spec.mxu == 0 and cfg.bn % spec.mxu == 0 and cfg.bk % spec.mxu == 0
+
+
+@given(
+    l1=st.integers(8 * 1024, 256 * 1024),
+    l2=st.integers(128 * 1024, 8 * 1024 * 1024),
+)
+@settings(max_examples=100, deadline=None)
+def test_goto_derivation_capacity_invariant(l1, l2):
+    cache = B.CacheHierarchy("x", l1_bytes=l1, l2_bytes=l2)
+    d = B.derive_goto_blocking(cache)
+    assert d.b_micropanel_bytes() <= l1
+    assert d.a_panel_bytes() <= l2
+
+
+# ---------------------------------------------------------------------------
+# Asymmetric batch layout: masking preserves every row exactly once
+# ---------------------------------------------------------------------------
+
+
+@given(
+    gb=st.integers(1, 512),
+    r2=st.floats(0.05, 1.0),
+    tile=st.sampled_from([1, 2, 4, 8]),
+)
+@settings(max_examples=100, deadline=None)
+def test_batch_layout_mask_consistency(gb, r2, tile):
+    am = AsymmetricMesh(
+        [
+            DeviceClass("big", chips_per_pod=4),
+            DeviceClass("little", chips_per_pod=4, rel_throughput=r2),
+        ],
+        strategy="sas",
+        batch_tile=tile,
+    )
+    layout = am.batch_layout(gb)
+    assert sum(layout.sizes) == gb
+    assert layout.mask.sum() == gb
+    assert layout.c_max % tile == 0
+    assert layout.c_max >= max(layout.sizes)

@@ -1,0 +1,88 @@
+"""Unit tests for the SSS/SAS/CA-SAS/DAS partitioners (paper Sections 4, 5.2, 5.4)."""
+
+import numpy as np
+import pytest
+
+from repro.core import schedule as S
+
+
+class TestStatic:
+    def test_sss_equal(self):
+        t = S.sss_partition(100, 4)
+        assert t.sizes() == [25, 25, 25, 25]
+
+    def test_sss_remainder(self):
+        t = S.sss_partition(10, 3)
+        assert sum(t.sizes()) == 10
+        assert max(t.sizes()) - min(t.sizes()) <= 1
+
+    def test_sas_ratio(self):
+        # Paper Figure 8: ratio 3 -> fast cluster gets 3x the slow one.
+        t = S.sas_partition(80, ratios=[3.0, 1.0])
+        assert t.sizes() == [60, 20]
+
+    def test_sas_workers(self):
+        t = S.sas_partition(100, ratios=[1.0, 1.0], workers=[4, 1])
+        assert t.sizes() == [80, 20]
+
+    def test_ca_sas_tile_alignment(self):
+        t = S.ca_sas_partition(1000, ratios=[5.0, 1.0], tiles=[152, 32])
+        sizes = t.sizes()
+        assert sum(sizes) == 1000
+        assert sizes[0] % 152 == 0  # big cluster aligned to its m_c
+
+    def test_validate_rejects_bad_table(self):
+        tb = S.ChunkTable(10, (S.Chunk(0, 0, 4), S.Chunk(1, 5, 5)))
+        with pytest.raises(ValueError):
+            tb.validate()
+
+
+class TestDynamic:
+    def test_das_covers_everything(self):
+        r = S.das_schedule(1000, rates=[4.0, 1.0], strides=[152, 32])
+        assert sum(r.sizes()) == 1000
+
+    def test_das_balances_by_rate(self):
+        r = S.das_schedule(10000, rates=[4.0, 1.0], strides=[100, 100])
+        sizes = r.sizes()
+        assert 3.0 < sizes[0] / max(sizes[1], 1) < 5.5
+
+    def test_das_makespan_beats_sss(self):
+        # The paper's core claim: dynamic beats the oblivious 50/50 split.
+        rates, strides = [4.0, 1.0], [152, 32]
+        dyn = S.das_schedule(2000, rates=rates, strides=strides)
+        half = 1000 / rates[0], 1000 / rates[1]
+        sss_makespan = max(half)
+        assert dyn.makespan < sss_makespan * 0.6
+
+    def test_das_deterministic(self):
+        a = S.das_schedule(500, rates=[2.0, 1.0], strides=[50, 20])
+        b = S.das_schedule(500, rates=[2.0, 1.0], strides=[50, 20])
+        assert a.assignments == b.assignments
+
+
+class TestDynamicScheduler:
+    def test_converges_to_measured_ratio(self):
+        d = S.DynamicScheduler(2, init_ratios=[1.0, 1.0], tiles=[8, 8])
+        for _ in range(20):
+            t = d.table(256)
+            s = t.sizes()
+            # pod0 is 3x faster: time proportional to units/rate
+            d.observe(s, [s[0] / 3.0 + 1e-9, s[1] / 1.0 + 1e-9])
+        s = d.table(256).sizes()
+        assert 2.0 < s[0] / max(s[1], 1) < 4.5
+
+    def test_starvation_floor(self):
+        d = S.DynamicScheduler(2, init_ratios=[1.0, 1e-6], tiles=[1, 1])
+        d.observe([10, 0], [0.1, 0.1])
+        assert d.rates[1] >= 0.02 * d.rates[0] * 0.99
+
+    def test_rebalance_counter(self):
+        d = S.DynamicScheduler(2, init_ratios=[1.0, 1.0], tiles=[1, 1])
+        d.table(100)
+        d.observe([50, 50], [0.1, 0.4])
+        d.table(100)
+        assert d.rebalances >= 1
+
+    def test_balanced_ratio(self):
+        assert S.balanced_ratio([9.6, 2.4]) == pytest.approx(4.0)

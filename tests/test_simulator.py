@@ -1,0 +1,134 @@
+"""Validation of the calibrated simulator against the paper's OWN claims.
+
+Calibration inputs are only the single-cluster rates and cache parameters
+(Section 3); everything asserted here is a *derived* published result.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as sim
+
+R_BIG = 6144  # paper's largest problem size regime
+
+
+class TestSingleCluster:
+    def test_a15_peak(self):
+        # Section 3.4: "the four cores of the Cortex-A15 cluster attain a
+        # peak performance of 9.6 GFLOPS"
+        g = sim.simulate_single_cluster(R_BIG, sim.A15, 4).gflops
+        assert g == pytest.approx(9.6, rel=0.06)
+
+    def test_a7_peak(self):
+        # "For the Cortex-A7 cluster, the peak performance is close to 2.4"
+        g = sim.simulate_single_cluster(R_BIG, sim.A7, 4).gflops
+        assert g == pytest.approx(2.4, rel=0.06)
+
+    def test_a15_over_a7_about_4x(self):
+        # "performance achieved by the complete Cortex-A15 cluster is
+        # roughly four times that of the Cortex-A7 cluster"
+        a15 = sim.simulate_single_cluster(R_BIG, sim.A15, 4).gflops
+        a7 = sim.simulate_single_cluster(R_BIG, sim.A7, 4).gflops
+        assert 3.3 < a15 / a7 < 4.7
+
+    def test_three_a15_cores_most_energy_efficient(self):
+        # Section 3.4: "the most energy-efficient solution is obtained with
+        # three cores instead of the complete cluster"
+        eff = [
+            sim.simulate_single_cluster(R_BIG, sim.A15, n).gflops_per_w
+            for n in (1, 2, 3, 4)
+        ]
+        assert int(np.argmax(eff)) == 2  # 3 cores
+
+    def test_4xa7_more_efficient_than_1xa15(self):
+        # "exploitation of four Cortex-A7 cores delivers significantly
+        # higher energy efficiency than ... a single Cortex-A15 core,
+        # though the overall performance ... is slightly worse"
+        a7 = sim.simulate_single_cluster(R_BIG, sim.A7, 4)
+        a15 = sim.simulate_single_cluster(R_BIG, sim.A15, 1)
+        assert a7.gflops_per_w > a15.gflops_per_w * 1.1
+        assert a7.gflops < a15.gflops
+
+
+class TestSSS:
+    def test_sss_is_40pct_of_a15(self):
+        # Section 4: SSS on all 8 cores delivers "only about 40% of the
+        # highest performance ... employing only the four Cortex-A15 cores"
+        sss = sim.simulate_static(R_BIG).gflops
+        a15 = sim.simulate_single_cluster(R_BIG, sim.A15, 4).gflops
+        assert sss / a15 == pytest.approx(0.40, abs=0.05)
+
+    def test_sss_worst_energy(self):
+        # "this configuration achieves the worst energy results"
+        sss = sim.simulate_static(R_BIG).gflops_per_w
+        others = [
+            sim.simulate_single_cluster(R_BIG, sim.A15, 4).gflops_per_w,
+            sim.simulate_single_cluster(R_BIG, sim.A7, 4).gflops_per_w,
+            sim.simulate_static(R_BIG, ratio=5).gflops_per_w,
+            sim.simulate_dynamic(R_BIG).gflops_per_w,
+        ]
+        assert all(sss < o for o in others)
+
+
+class TestSAS:
+    def test_optimum_ratio_5_to_6(self):
+        # Section 5.2.2: "the performance grows until a ratio of 5-6"
+        results = sim.sweep_ratio(R_BIG, ratios=range(1, 8))
+        best = int(np.argmax([r.gflops for r in results])) + 1
+        assert best in (5, 6)
+
+    def test_sas_beats_a15_by_20pct(self):
+        # "the increment of performance for SAS compared with ... four
+        # Cortex-A15 cores only is close to 20%"
+        best = max(r.gflops for r in sim.sweep_ratio(R_BIG, ratios=range(1, 8)))
+        a15 = sim.simulate_single_cluster(R_BIG, sim.A15, 4).gflops
+        assert best / a15 == pytest.approx(1.20, abs=0.07)
+
+    def test_small_problems_worse(self):
+        # "SAS offers lower performance for the small problems"
+        small = sim.simulate_static(512, ratio=5).gflops
+        big = sim.simulate_static(R_BIG, ratio=5).gflops
+        assert small < big
+
+    def test_close_to_ideal(self):
+        best = max(r.gflops for r in sim.sweep_ratio(R_BIG, ratios=range(1, 8)))
+        assert best > 0.9 * sim.ideal_gflops(R_BIG)
+
+
+class TestCASAS:
+    def test_ca_helps_only_below_ratio_5(self):
+        # Section 5.3.1: "improvements at this point are only visible when
+        # too much work is assigned to the Cortex-A7 cluster (ratios < 5)"
+        for ratio in (1, 3):
+            ca = sim.simulate_static(R_BIG, ratio=ratio, cache_aware=True).gflops
+            plain = sim.simulate_static(R_BIG, ratio=ratio).gflops
+            assert ca > plain * 1.05
+        for ratio in (5, 6):
+            ca = sim.simulate_static(R_BIG, ratio=ratio, cache_aware=True).gflops
+            plain = sim.simulate_static(R_BIG, ratio=ratio).gflops
+            assert ca == pytest.approx(plain, rel=0.03)
+
+    def test_loop4_beats_loop5(self):
+        # Section 5.3.1 / Figure 11: fine-grain Loop 4 > Loop 5.
+        l4 = sim.simulate_static(R_BIG, ratio=5, cache_aware=True, fine="loop4").gflops
+        l5 = sim.simulate_static(R_BIG, ratio=5, cache_aware=True, fine="loop5").gflops
+        assert l4 > l5
+
+
+class TestCADAS:
+    def test_cadas_beats_das(self):
+        # Section 5.4.1: "the use of two control-trees has a great impact"
+        cadas = sim.simulate_dynamic(R_BIG, cache_aware=True).gflops
+        das = sim.simulate_dynamic(R_BIG, cache_aware=False).gflops
+        assert cadas > das * 1.05
+
+    def test_cadas_at_least_best_static_chosen_ratio(self):
+        # CA-DAS needs no ratio knob yet matches the tuned CA-SAS(5).
+        cadas = sim.simulate_dynamic(R_BIG, cache_aware=True).gflops
+        ca_sas5 = sim.simulate_static(R_BIG, ratio=5, cache_aware=True).gflops
+        assert cadas >= ca_sas5 * 0.97
+
+    def test_loop4_beats_loop5_dynamic(self):
+        l4 = sim.simulate_dynamic(R_BIG, fine="loop4").gflops
+        l5 = sim.simulate_dynamic(R_BIG, fine="loop5").gflops
+        assert l4 > l5

@@ -1,0 +1,218 @@
+"""Substrate tests: optimizer, data pipeline, checkpointing, collectives,
+control trees, HLO analyzer."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import blocking as B
+from repro.core.control_tree import build_control_trees
+from repro.data.pipeline import AsymmetricBatcher, SyntheticLM
+from repro.core.asymmetric import AsymmetricMesh, DeviceClass, calibrate_ratios
+from repro.distributed.collectives import dequantize_int8, quantize_int8
+from repro.launch import hlo_analysis as H
+from repro.optim import adamw as O
+
+
+class TestAdamW:
+    def test_reduces_quadratic(self):
+        cfg = O.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=100,
+                            schedule="constant")
+        params = {"w": jnp.asarray([3.0, -2.0])}
+        state = O.init_opt_state(params)
+        for _ in range(60):
+            grads = {"w": 2 * params["w"]}
+            params, state, m = O.adamw_update(params, grads, state, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.5
+
+    def test_clip(self):
+        g = {"a": jnp.full((4,), 100.0)}
+        clipped, norm = O.clip_by_global_norm(g, 1.0)
+        assert float(O.global_norm(clipped)) <= 1.0 + 1e-5
+        assert float(norm) > 100
+
+    def test_schedule_warmup_and_decay(self):
+        cfg = O.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+        assert float(O.lr_at(cfg, jnp.int32(5))) == pytest.approx(0.5)
+        assert float(O.lr_at(cfg, jnp.int32(10))) == pytest.approx(1.0)
+        assert float(O.lr_at(cfg, jnp.int32(100))) < 0.01
+
+    def test_grad_accumulation_equivalence(self):
+        def loss_fn(p, b):
+            pred = b["x"] @ p["w"]
+            l = jnp.mean((pred - b["y"]) ** 2)
+            return l, {"l": l}
+
+        p = {"w": jnp.ones((4, 2))}
+        rng = np.random.default_rng(0)
+        batch = {"x": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+                 "y": jnp.asarray(rng.normal(size=(8, 2)), jnp.float32)}
+        l1, _, g1 = O.accumulate_gradients(loss_fn, p, batch, 1)
+        l4, _, g4 = O.accumulate_gradients(loss_fn, p, batch, 4)
+        np.testing.assert_allclose(float(l1), float(l4), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(g1["w"]), np.asarray(g4["w"]), rtol=1e-4)
+
+
+class TestData:
+    def test_deterministic_resume(self):
+        src = SyntheticLM(vocab=100, seed=7)
+        a = src.batch(5, 4, 16)
+        b = src.batch(5, 4, 16)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+
+    def test_labels_are_shifted_stream(self):
+        src = SyntheticLM(vocab=100, seed=7)
+        b = src.batch(0, 2, 16)
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+        np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+    def test_asymmetric_batcher_preserves_rows(self):
+        src = SyntheticLM(vocab=50, seed=1)
+        am = AsymmetricMesh(
+            [DeviceClass("a", chips_per_pod=2), DeviceClass("b", chips_per_pod=1,
+                                                            rel_throughput=0.5)],
+            strategy="sas", batch_tile=2,
+        )
+        bw = AsymmetricBatcher(src, am).batch(3, 10, 8)
+        logical = src.batch(3, 10, 8)
+        mask = bw.arrays["mask"][:, 0] > 0
+        np.testing.assert_array_equal(bw.arrays["tokens"][mask], logical["tokens"])
+        assert bw.arrays["mask"].sum() == 10 * 8
+
+    def test_calibrate_ratios(self):
+        r = calibrate_ratios([[0.1, 0.1], [0.4, 0.4]], [8, 8])
+        assert r[0] == pytest.approx(1.0)
+        assert r[1] == pytest.approx(0.25)
+
+
+class TestCheckpointer:
+    def test_roundtrip_and_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2, async_save=False)
+        tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.float32(3.5)}}
+        for step in (1, 2, 3):
+            ck.save(step, tree)
+        assert ck.committed_steps() == [2, 3]
+        out, manifest = ck.restore(tree)
+        np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(tree["a"]))
+        assert manifest["step"] == 3
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=True)
+        ck.save(1, {"w": jnp.ones((128, 128))})
+        ck.wait()
+        assert ck.latest_step() == 1
+
+    def test_restore_specific_step(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=0, async_save=False)
+        ck.save(1, {"w": jnp.float32(1)})
+        ck.save(2, {"w": jnp.float32(2)})
+        out, _ = ck.restore({"w": jnp.float32(0)}, step=1)
+        assert float(out["w"]) == 1.0
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), async_save=False)
+        ck.save(1, {"w": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            ck.restore({"w": jnp.ones((3,))})
+
+
+class TestCollectives:
+    def test_int8_roundtrip_error_bounded(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(128,)), jnp.float32)
+        q, s = quantize_int8(x)
+        err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+        assert err.max() <= float(s) * 0.5 + 1e-7
+
+    def test_error_feedback_reduces_bias(self):
+        """Accumulated error feedback keeps the long-run mean unbiased."""
+
+        rng = np.random.default_rng(1)
+        g_true = jnp.asarray(rng.normal(size=(64,)), jnp.float32) * 1e-3
+        err = jnp.zeros_like(g_true)
+        total = jnp.zeros_like(g_true)
+        for _ in range(200):
+            q, s = quantize_int8(g_true + err)
+            g_hat = dequantize_int8(q, s)
+            err = g_true + err - g_hat
+            total = total + g_hat
+        np.testing.assert_allclose(np.asarray(total / 200), np.asarray(g_true),
+                                   rtol=0.05, atol=1e-6)
+
+
+class TestControlTree:
+    SPECS = {
+        "big": B.TPU_V5E,
+        "little": B.TpuCoreSpec(name="little", vmem_bytes=8 * 1024 * 1024),
+    }
+
+    def test_two_trees_cache_aware(self):
+        trees = build_control_trees(self.SPECS, 4096, 4096, 4096, coarse_loop="rows")
+        assert trees["big"].block.bk == trees["little"].block.bk  # shared B panel
+        assert trees["little"].block.vmem_bytes() <= 8 * 1024 * 1024 * 0.9
+        assert trees["little"].block.bm <= trees["big"].block.bm
+
+    def test_single_tree_oblivious(self):
+        trees = build_control_trees(self.SPECS, 4096, 4096, 4096, cache_aware=False)
+        assert trees["big"].block == trees["little"].block
+
+    def test_cols_coarse_loop_independent(self):
+        trees = build_control_trees(self.SPECS, 4096, 4096, 4096, coarse_loop="cols")
+        assert trees["little"].block.fits(self.SPECS["little"])
+
+
+class TestHloAnalysis:
+    def test_scan_trip_multiplication(self):
+        L_, D_, B_ = 5, 32, 4
+
+        def f(params, x):
+            def layer(x, p):
+                return jnp.tanh(x @ p), None
+            x, _ = jax.lax.scan(layer, x, params)
+            return x.sum()
+
+        params = jnp.ones((L_, D_, D_))
+        x = jnp.ones((B_, D_))
+        c = jax.jit(f).lower(params, x).compile()
+        cost = H.analyze(c.as_text())
+        assert cost.flops == pytest.approx(2 * B_ * D_ * D_ * L_, rel=0.01)
+        assert list(cost.while_trips.values()) == [L_]
+
+    def test_grad_scan_counts_bwd(self):
+        L_, D_, B_ = 4, 16, 2
+
+        def f(params, x):
+            def layer(x, p):
+                return jnp.tanh(x @ p), None
+            x, _ = jax.lax.scan(layer, x, params)
+            return x.sum()
+
+        params = jnp.ones((L_, D_, D_))
+        x = jnp.ones((B_, D_))
+        c = jax.jit(jax.grad(f)).lower(params, x).compile()
+        cost = H.analyze(c.as_text())
+        assert cost.flops == pytest.approx(3 * 2 * B_ * D_ * D_ * L_, rel=0.01)
+
+    def test_collective_bytes_sharded_matmul(self):
+        if jax.device_count() < 1:
+            pytest.skip("needs devices")
+        # all-reduce from contracting-dim sharding on a 1-device mesh is
+        # elided; just assert the analyzer runs on sharded HLO and finds
+        # positive bytes.
+        mesh = jax.make_mesh((1,), ("model",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        f = jax.jit(lambda a, b: a @ b,
+                    in_shardings=(NamedSharding(mesh, P(None, "model")),
+                                  NamedSharding(mesh, P("model", None))),
+                    out_shardings=NamedSharding(mesh, P()))
+        with mesh:
+            c = f.lower(jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile()
+        cost = H.analyze(c.as_text())
+        assert cost.flops > 0 and cost.bytes > 0
