@@ -8,7 +8,13 @@ Three tiers:
     perf path is Mosaic on TPU).
 
 Also times the paper's coarse->fine empirical search protocol (Section 3.3)
-over Pallas block configs using the XLA backend as the stand-in executor.
+over Pallas block configs using the XLA backend as the stand-in executor,
+and compares the ``repro.tuning`` searched config against the analytical
+default under the deterministic cost model (tuned-vs-analytical mode).
+
+Besides the human-readable rows, every shape emits a machine-readable
+record into ``artifacts/bench/BENCH_gemm.json`` so successive PRs get a
+perf trajectory.
 """
 
 from __future__ import annotations
@@ -17,8 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.harness import Row, time_fn, write_csv
-from repro.core.blocking import BlockConfig, derive_block_config, search_grid
+from benchmarks.harness import Row, time_fn, write_csv, write_json
+from repro.core.blocking import TPU_V5E, BlockConfig, derive_block_config, search_grid
 from repro.kernels.gemm import gemm_pallas
 from repro.kernels.ref import blocked_gemm_tpu_ref, gemm_ref
 
@@ -27,8 +33,62 @@ def _gflops(m, k, n, us):
     return 2.0 * m * k * n / (us * 1e-6) / 1e9
 
 
+def _record(impl, m, k, n, us, **extra):
+    return {
+        "bench": "gemm",
+        "impl": impl,
+        "shape": f"{m}x{k}x{n}",
+        "m": m,
+        "k": k,
+        "n": n,
+        "us_per_call": us,
+        "gflops": _gflops(m, k, n, us),
+        **extra,
+    }
+
+
+def tuned_vs_analytical(
+    shapes=((512, 512, 512), (1024, 1024, 1024), (300, 1100, 200))
+) -> tuple[list[Row], list[dict]]:
+    """Cost-model comparison: searched config vs analytical default.
+
+    Uses the deterministic ``repro.tuning`` cost-model backend so the
+    comparison is reproducible on any host; on TPU the same search can be
+    re-run with ``--backend wallclock`` via the tune CLI.
+    """
+
+    from repro.tuning.measure import make_backend
+    from repro.tuning.tune import search_shape
+
+    rows, records = [], []
+    backend = make_backend("cost-model", spec=TPU_V5E)
+    for m, k, n in shapes:
+        res = search_shape(m, k, n, spec=TPU_V5E, dtype_bytes=2, backend=backend)
+        rows.append(
+            Row(
+                f"gemm_tuned_vs_analytical_{m}x{k}x{n}",
+                res.best_time_s * 1e6,
+                f"speedup={res.speedup:.3f} tuned=({res.best.bm},{res.best.bk},"
+                f"{res.best.bn}) analytical=({res.analytical.bm},"
+                f"{res.analytical.bk},{res.analytical.bn})",
+            )
+        )
+        records.append(
+            _record(
+                "tuned_cost_model", m, k, n, res.best_time_s * 1e6,
+                analytical_us=res.analytical_time_s * 1e6,
+                speedup_vs_analytical=res.speedup,
+                tuned_block=[res.best.bm, res.best.bk, res.best.bn],
+                analytical_block=[res.analytical.bm, res.analytical.bk, res.analytical.bn],
+                n_candidates=res.n_candidates,
+            )
+        )
+    return rows, records
+
+
 def run() -> list[Row]:
     rows = []
+    records = []
     rng = np.random.default_rng(0)
 
     # XLA baseline across sizes.
@@ -40,6 +100,7 @@ def run() -> list[Row]:
         us = time_fn(lambda: jax.block_until_ready(f(a, b)), reps=7)
         g = _gflops(m, m, m, us)
         lines.append(f"xla,{m},{us:.1f},{g:.2f}")
+        records.append(_record("xla", m, m, m, us))
         if m == 1024:
             rows.append(Row("gemm_xla_1024", us, f"gflops={g:.2f}"))
 
@@ -50,6 +111,7 @@ def run() -> list[Row]:
     fb = jax.jit(lambda a, b: blocked_gemm_tpu_ref(a, b, cfg))
     us = time_fn(lambda: jax.block_until_ready(fb(a, b)), reps=5)
     lines.append(f"blocked_ref,512,{us:.1f},{_gflops(512,512,512,us):.2f}")
+    records.append(_record("blocked_ref", 512, 512, 512, us))
     rows.append(Row("gemm_blocked_ref_512", us, f"gflops={_gflops(512,512,512,us):.2f}"))
 
     # Pallas interpret-mode correctness-path timing (small).
@@ -60,6 +122,7 @@ def run() -> list[Row]:
         warmup=1,
     )
     lines.append(f"pallas_interpret,256,{us:.1f},{_gflops(256,256,256,us):.2f}")
+    records.append(_record("pallas_interpret", 256, 256, 256, us, note="not perf"))
     rows.append(Row("gemm_pallas_interpret_256", us, "correctness-path (not perf)"))
     write_csv("gemm_wallclock.csv", "impl,m,us,gflops", lines)
 
@@ -84,4 +147,18 @@ def run() -> list[Row]:
             f"analytic=(bm={analytic.bm},bk={analytic.bk})",
         )
     )
+    records.append(
+        _record(
+            "cache_search_protocol", m, k, n, best_us,
+            empirical_block=[best_cfg.bm, best_cfg.bk, best_cfg.bn],
+            analytical_block=[analytic.bm, analytic.bk, analytic.bn],
+        )
+    )
+
+    # Tuned-vs-analytical under the repro.tuning cost model.
+    trows, trecords = tuned_vs_analytical()
+    rows += trows
+    records += trecords
+
+    write_json("BENCH_gemm.json", records)
     return rows

@@ -43,3 +43,16 @@ def write_csv(fname: str, header: str, lines: list[str]) -> str:
         f.write(header + "\n")
         f.write("\n".join(lines) + "\n")
     return path
+
+
+def write_json(fname: str, records: list[dict]) -> str:
+    """Machine-readable benchmark artifact (one record per measured cell)."""
+
+    import json
+
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, fname)
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path

@@ -117,9 +117,13 @@ class Checkpointer:
     def committed_steps(self) -> list[int]:
         out = []
         for name in os.listdir(self.dir):
-            p = os.path.join(self.dir, name)
-            if name.startswith("step_") and os.path.exists(os.path.join(p, "COMMITTED")):
-                out.append(int(name.split("_")[1]))
+            suffix = name[len("step_"):] if name.startswith("step_") else ""
+            # `.tmp` staging dirs (interrupted saves) already hold COMMITTED
+            # before the rename — only fully renamed step dirs count.
+            if not suffix.isdigit():
+                continue
+            if os.path.exists(os.path.join(self.dir, name, "COMMITTED")):
+                out.append(int(suffix))
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:

@@ -63,7 +63,7 @@ def biglittle_classes(chips_per_pod: int = 256) -> list[DeviceClass]:
         peak_flops=99e12,
         hbm_bw=410e9,
         rel_throughput=0.25,
-        spec=dataclasses.replace(B.TPU_V5E, name="tpu-little", vmem_bytes=8 * 1024 * 1024),
+        spec=B.TPU_LITTLE,
     )
     return [big, little]
 
@@ -104,6 +104,7 @@ class AsymmetricMesh:
         self.classes = list(classes)
         self.strategy = strategy
         self.batch_tile = batch_tile
+        self.calibration = None  # set by from_calibration()
         self.n_pods = sum(c.n_pods for c in self.classes)
         # Per-pod throughput weights (a class may own several pods).
         self._pod_class = [
@@ -120,6 +121,44 @@ class AsymmetricMesh:
             workers=workers,
             tiles=tiles if strategy in ("ca-sas", "ca-das") else [batch_tile] * self.n_pods,
         )
+
+    @classmethod
+    def from_calibration(
+        cls,
+        classes: Sequence[DeviceClass],
+        calibration=None,
+        *,
+        probe_shape: tuple[int, int, int] = (1024, 1024, 1024),
+        backend: str = "cost-model",
+        **kwargs,
+    ) -> "AsymmetricMesh":
+        """Build a mesh whose per-class throughputs are *measured*, not typed.
+
+        Runs (or accepts) a :class:`repro.tuning.ratio.Calibration` over
+        ``classes`` and replaces each class's hand-set ``rel_throughput``
+        with the calibrated ratio — the paper's Section 5.2.2 knob, set
+        empirically.  The result seeds ``DynamicScheduler.init_ratios``;
+        the between-steps feedback keeps refining from there.
+        """
+
+        from repro.tuning.ratio import calibrate_class_ratios
+
+        if calibration is None:
+            calibration = calibrate_class_ratios(
+                classes, probe_shape=probe_shape, backend=backend
+            )
+        if len(calibration.ratios) != len(classes):
+            raise ValueError(
+                f"calibration covers {len(calibration.ratios)} classes, "
+                f"got {len(classes)}"
+            )
+        calibrated = [
+            dataclasses.replace(c, rel_throughput=float(r))
+            for c, r in zip(classes, calibration.ratios)
+        ]
+        mesh = cls(calibrated, **kwargs)
+        mesh.calibration = calibration
+        return mesh
 
     def _tiles(self) -> list[int]:
         # CA: each pod's chunk aligns to its own microbatch tile — a class

@@ -77,6 +77,18 @@ CORTEX_A7 = CacheHierarchy("cortex-a7", l1_bytes=32 * 1024, l2_bytes=512 * 1024)
 
 TPU_V5E = TpuCoreSpec()
 
+# The degraded device class of the motivating heterogeneous fleet (see
+# ``repro.core.asymmetric.biglittle_classes``): half the VMEM, half the
+# sustained FLOPs and HBM bandwidth.  Single source of truth — the
+# asymmetric mesh, the tuning SPECS registry, and the ratio calibration
+# all mean *this* hardware when they say "tpu-little".
+TPU_LITTLE = TpuCoreSpec(
+    name="tpu-little",
+    vmem_bytes=8 * 1024 * 1024,
+    peak_flops=99e12,
+    hbm_bw=410e9,
+)
+
 
 # ---------------------------------------------------------------------------
 # Block configurations
@@ -301,6 +313,7 @@ __all__ = [
     "CORTEX_A15",
     "CORTEX_A7",
     "TPU_V5E",
+    "TPU_LITTLE",
     "PAPER_A15",
     "PAPER_A7",
     "PAPER_A7_SHARED_KC",

@@ -45,6 +45,24 @@ except Exception:  # pragma: no cover
 from repro.core.blocking import BlockConfig, derive_block_config, pad_to_blocks
 
 
+def resolve_block_config(m: int, k: int, n: int, dtype) -> BlockConfig:
+    """Config used when the caller passes ``cfg=None``.
+
+    With ``$REPRO_TUNING_CACHE`` set, the tuned entry for this
+    (spec, dtype, shape bucket) wins; otherwise — and always when the env
+    var is unset — the analytical derivation is used, so defaults are
+    unchanged.  The kernel itself is identical either way; only the block
+    shapes differ.
+    """
+
+    from repro.tuning.cache import cached_block_config
+
+    cfg = cached_block_config(m, k, n, dtype.name, dtype.itemsize)
+    if cfg is not None:
+        return cfg
+    return derive_block_config(m, k, n, dtype_bytes=dtype.itemsize)
+
+
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref):
     """Grid point (i, j, k): C[i,j] += A[i,k] @ B[k,j] with fp32 VMEM acc."""
 
@@ -83,7 +101,7 @@ def gemm_pallas(
         raise ValueError(f"inner dims mismatch: {a.shape} @ {b.shape}")
     out_dtype = out_dtype or a.dtype
     if cfg is None:
-        cfg = derive_block_config(m, k, n, dtype_bytes=a.dtype.itemsize)
+        cfg = resolve_block_config(m, k, n, a.dtype)
 
     pm, pk, pn = pad_to_blocks(m, k, n, cfg)
     if (pm, pk) != (m, k):
@@ -129,4 +147,4 @@ def gemm_pallas_jit(a, b, cfg=None, out_dtype=None, interpret=False):
     return gemm_pallas(a, b, cfg, out_dtype=out_dtype, interpret=interpret)
 
 
-__all__ = ["gemm_pallas", "gemm_pallas_jit"]
+__all__ = ["gemm_pallas", "gemm_pallas_jit", "resolve_block_config"]

@@ -116,9 +116,9 @@ def _parse_operand_names(args: str) -> list[str]:
     depth = 0
     cur = []
     for ch in args:
-        if ch == "(" or ch == "{":
+        if ch in "({[":
             depth += 1
-        elif ch == ")" or ch == "}":
+        elif ch in ")}]":
             depth -= 1
         if ch == "," and depth == 0:
             names.append("".join(cur))

@@ -19,7 +19,7 @@ def _mk(shape, axes):
         return jax.make_mesh(
             shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
         )
-    except TypeError:  # older jax without axis_types
+    except (TypeError, AttributeError):  # older jax without axis_types/AxisType
         return jax.make_mesh(shape, axes)
 
 

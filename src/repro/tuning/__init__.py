@@ -1,0 +1,46 @@
+"""Architecture-aware autotuning (the paper's empirical configuration loop).
+
+The paper's headline result (Sections 3.3, 5.1–5.2) is that the *measured*
+per-core-class optima for the BLIS blocking parameters and the big:LITTLE
+ratio knob beat the purely analytical derivation.  This package closes the
+same loop for the TPU reproduction:
+
+  candidates.py  — enumerate MXU-aligned ``BlockConfig`` candidates under
+                   the VMEM budget (the search space of Figure 4), seeded
+                   by and expanded around the analytical optimum of
+                   :func:`repro.core.blocking.derive_block_config`.
+  measure.py     — score candidates: a deterministic roofline cost model
+                   (CI / tests) or real wall-clock timing of the Pallas
+                   kernel (interpret on CPU, compiled on TPU).
+  cache.py       — versioned on-disk JSON cache keyed by
+                   ``(core-spec, dtype, shape bucket)`` with atomic writes;
+                   lookup falls back to the analytical config on miss.
+  ratio.py       — per-class throughput-ratio calibration (the Section
+                   5.2.2 knob sweep) feeding ``AsymmetricMesh`` /
+                   ``DynamicScheduler`` init ratios.
+  tune.py        — the CLI: ``python -m repro.tuning.tune --spec tpu-v5e
+                   --backend cost-model --shapes 512x512x512`` searches and
+                   persists the cache consumed by ``kernels/gemm.py``.
+
+Consumption is opt-in: set ``REPRO_TUNING_CACHE=/path/to/cache.json`` and
+``gemm_pallas(a, b)`` (with ``cfg=None``) picks the tuned block shapes;
+unset, the analytical derivation is used exactly as before.
+"""
+
+from repro.tuning.cache import TuningCache, shape_bucket_key
+from repro.tuning.candidates import SPECS, analytical_config, enumerate_candidates
+from repro.tuning.measure import cost_model_time, make_backend
+from repro.tuning.ratio import Calibration, calibrate_class_ratios, sweep_ratio_knob
+
+__all__ = [
+    "TuningCache",
+    "shape_bucket_key",
+    "SPECS",
+    "analytical_config",
+    "enumerate_candidates",
+    "cost_model_time",
+    "make_backend",
+    "Calibration",
+    "calibrate_class_ratios",
+    "sweep_ratio_knob",
+]

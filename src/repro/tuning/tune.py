@@ -1,0 +1,276 @@
+"""Autotune CLI: search block configs per shape and persist the cache.
+
+Workflow (the paper's Section 3.3 search, driven to a cache file)::
+
+    # search two shapes with the deterministic cost model and write the cache
+    PYTHONPATH=src python -m repro.tuning.tune \
+        --spec tpu-v5e --backend cost-model \
+        --shapes 512x512x512,1024x1024x1024 --cache artifacts/tuning.json
+
+    # second invocation: every shape is already cached -> logged hits, no search
+    PYTHONPATH=src python -m repro.tuning.tune \
+        --spec tpu-v5e --backend cost-model \
+        --shapes 512x512x512,1024x1024x1024 --cache artifacts/tuning.json
+
+    # consume from the kernel path
+    REPRO_TUNING_CACHE=artifacts/tuning.json python train.py ...
+
+``--backend wallclock`` times the real Pallas kernel instead (compiled on
+TPU, interpret on CPU — slow, hardware-representative).  ``--dry-run``
+searches a tiny default shape set and writes nothing (the CI smoke step).
+``--calibrate-ratios`` additionally runs the Section 5.2.2 per-class
+calibration over the big.LITTLE device classes and records the resulting
+``init_ratios`` in the cache metadata block.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import sys
+import time
+from typing import Optional, Sequence
+
+from repro.core.blocking import BlockConfig, TpuCoreSpec
+from repro.tuning import cache as C
+from repro.tuning import candidates as CAND
+from repro.tuning import measure as M
+
+log = logging.getLogger("repro.tuning.tune")
+
+DTYPES = {"bf16": ("bfloat16", 2), "f32": ("float32", 4)}
+DRY_RUN_SHAPES = [(256, 256, 256), (512, 512, 512)]
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Outcome of tuning one shape (or of a cache hit skipping the search)."""
+
+    shape: tuple[int, int, int]
+    best: BlockConfig
+    best_time_s: float
+    analytical: BlockConfig
+    analytical_time_s: float
+    n_candidates: int
+    cache_hit: bool = False
+
+    @property
+    def speedup(self) -> float:
+        return self.analytical_time_s / self.best_time_s if self.best_time_s else 1.0
+
+
+def search_shape(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    spec: TpuCoreSpec,
+    dtype_bytes: int,
+    backend,
+    max_candidates: Optional[int] = None,
+) -> SearchResult:
+    """Score every candidate; the analytical config is always candidate #0,
+    so the winner's time is <= the analytical default's by construction."""
+
+    cands = CAND.enumerate_candidates(m, k, n, spec=spec, dtype_bytes=dtype_bytes)
+    if max_candidates is not None and len(cands) > max_candidates:
+        # Keep the analytical seed, truncate the tail of the coarse grid.
+        cands = cands[:max_candidates]
+    analytical = cands[0]
+    best, best_t, ana_t = None, float("inf"), None
+    for cfg in cands:
+        t = backend(m, k, n, cfg)
+        if cfg == analytical:
+            ana_t = t
+        if t < best_t:
+            best, best_t = cfg, t
+    assert best is not None and ana_t is not None
+    return SearchResult(
+        shape=(m, k, n),
+        best=best,
+        best_time_s=best_t,
+        analytical=analytical,
+        analytical_time_s=ana_t,
+        n_candidates=len(cands),
+    )
+
+
+def parse_shapes(text: str) -> list[tuple[int, int, int]]:
+    """``"512x512x512,1024x1024x1024"`` → [(512,512,512), (1024,1024,1024)]."""
+
+    out = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        dims = part.lower().split("x")
+        if len(dims) != 3:
+            raise ValueError(f"shape {part!r} is not MxKxN")
+        out.append(tuple(int(d) for d in dims))
+    if not out:
+        raise ValueError("no shapes given")
+    return out
+
+
+def tune_shapes(
+    shapes: Sequence[tuple[int, int, int]],
+    *,
+    spec: TpuCoreSpec,
+    dtype: str = "bf16",
+    backend_name: str = "cost-model",
+    cache: Optional[C.TuningCache] = None,
+    force: bool = False,
+    max_candidates: Optional[int] = None,
+) -> list[SearchResult]:
+    """Library entry point: search ``shapes``, updating ``cache`` in place."""
+
+    dtype_name, dtype_bytes = DTYPES[dtype]
+    backend = M.make_backend(backend_name, spec=spec)
+    results = []
+    for m, k, n in shapes:
+        cached = cache.get(spec.name, dtype_name, m, k, n) if cache else None
+        if cached is not None and not force:
+            key = C.shape_bucket_key(spec.name, dtype_name, m, k, n)
+            log.info("cache hit for %s — skipping search (use --force to redo)", key)
+            ana = CAND.analytical_config(m, k, n, spec=spec, dtype_bytes=dtype_bytes)
+            # Report the times recorded at tuning, not fresh measurements —
+            # re-timing a hit would defeat the point of the cache under the
+            # wallclock backend (2 real kernel runs per already-tuned shape).
+            entry = cache.entries.get(key, {})
+            best_t = entry.get("time_s")
+            ana_t = entry.get("analytical_time_s")
+            if best_t is None or ana_t is None:
+                best_t = backend(m, k, n, cached)
+                ana_t = backend(m, k, n, ana)
+            results.append(
+                SearchResult(
+                    shape=(m, k, n),
+                    best=cached,
+                    best_time_s=float(best_t),
+                    analytical=ana,
+                    analytical_time_s=float(ana_t),
+                    n_candidates=0,
+                    cache_hit=True,
+                )
+            )
+            continue
+        t0 = time.perf_counter()
+        res = search_shape(
+            m, k, n,
+            spec=spec,
+            dtype_bytes=dtype_bytes,
+            backend=backend,
+            max_candidates=max_candidates,
+        )
+        log.info(
+            "tuned %dx%dx%d: best=(%d,%d,%d) %.3es vs analytical=(%d,%d,%d) "
+            "%.3es (%.2fx, %d candidates, %.1fs search)",
+            m, k, n,
+            res.best.bm, res.best.bk, res.best.bn, res.best_time_s,
+            res.analytical.bm, res.analytical.bk, res.analytical.bn,
+            res.analytical_time_s, res.speedup, res.n_candidates,
+            time.perf_counter() - t0,
+        )
+        if cache is not None:
+            cache.put(
+                spec.name, dtype_name, m, k, n, res.best,
+                backend=backend_name,
+                time_s=res.best_time_s,
+                analytical_time_s=res.analytical_time_s,
+            )
+        results.append(res)
+    return results
+
+
+def main(argv: Optional[Sequence[str]] = None) -> dict:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tuning.tune",
+        description="Architecture-aware GEMM block-config autotuner.",
+    )
+    ap.add_argument("--spec", default="tpu-v5e", choices=sorted(CAND.SPECS))
+    ap.add_argument("--shapes", default=None, help="comma-separated MxKxN list")
+    ap.add_argument("--dtype", default="bf16", choices=sorted(DTYPES))
+    ap.add_argument("--backend", default="cost-model", choices=["cost-model", "wallclock"])
+    ap.add_argument("--cache", default=None, help="cache file (default: $REPRO_TUNING_CACHE or artifacts/tuning/cache.json)")
+    ap.add_argument("--force", action="store_true", help="re-search cached shapes")
+    ap.add_argument("--max-candidates", type=int, default=None)
+    ap.add_argument("--calibrate-ratios", action="store_true",
+                    help="also calibrate big.LITTLE class ratios (Section 5.2.2)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="search a tiny default shape set, write nothing")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(name)s: %(message)s")
+
+    import os
+
+    spec = CAND.get_spec(args.spec)
+    try:
+        shapes = parse_shapes(args.shapes) if args.shapes else list(DRY_RUN_SHAPES)
+    except ValueError as e:
+        ap.error(str(e))
+    cache_path = args.cache or os.environ.get(C.ENV_VAR) or os.path.join(
+        "artifacts", "tuning", "cache.json"
+    )
+    cache = C.TuningCache.load(cache_path)
+
+    results = tune_shapes(
+        shapes,
+        spec=spec,
+        dtype=args.dtype,
+        backend_name=args.backend,
+        cache=cache,
+        force=args.force,
+        max_candidates=args.max_candidates,
+    )
+
+    summary: dict = {
+        "spec": spec.name,
+        "backend": args.backend,
+        "dtype": args.dtype,
+        "cache_path": None if args.dry_run else cache_path,
+        "shapes": [
+            {
+                "shape": list(r.shape),
+                "best": [r.best.bm, r.best.bk, r.best.bn],
+                "best_time_s": r.best_time_s,
+                "analytical": [r.analytical.bm, r.analytical.bk, r.analytical.bn],
+                "analytical_time_s": r.analytical_time_s,
+                "speedup_vs_analytical": r.speedup,
+                "cache_hit": r.cache_hit,
+            }
+            for r in results
+        ],
+    }
+
+    if args.calibrate_ratios:
+        from repro.core.asymmetric import biglittle_classes
+        from repro.tuning.ratio import calibrate_class_ratios
+
+        # Always the cost model here: wallclock cannot compare the two
+        # heterogeneous core specs on one host (ratio.py raises) — per-pod
+        # wallclock ratios come from measured step times via
+        # repro.core.asymmetric.calibrate_ratios instead.
+        cal = calibrate_class_ratios(biglittle_classes(), backend="cost-model")
+        log.info("calibrated class ratios %s -> %s (knob=%.2f)",
+                 cal.class_names, [round(x, 4) for x in cal.ratios], cal.knob())
+        cache.entries.setdefault("__meta__", {})["init_ratios"] = {
+            "classes": list(cal.class_names),
+            "ratios": list(cal.ratios),
+            "probe_shape": list(cal.probe_shape),
+            "backend": cal.backend,
+        }
+        summary["init_ratios"] = list(cal.ratios)
+
+    if args.dry_run:
+        log.info("dry run: searched %d shapes, cache not written", len(results))
+    else:
+        cache.save(cache_path)
+        log.info("wrote %d entries to %s", len(cache.entries), cache_path)
+
+    return summary
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

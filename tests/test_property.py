@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import blocking as B
 from repro.core import schedule as S

@@ -203,8 +203,9 @@ class TestHloAnalysis:
         # all-reduce from contracting-dim sharding on a 1-device mesh is
         # elided; just assert the analyzer runs on sharded HLO and finds
         # positive bytes.
-        mesh = jax.make_mesh((1,), ("model",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import _mk
+
+        mesh = _mk((1,), ("model",))
         from jax.sharding import NamedSharding, PartitionSpec as P
 
         f = jax.jit(lambda a, b: a @ b,
