@@ -1,11 +1,51 @@
 """Scheduler micro-benchmarks: partitioner overhead must be negligible vs a
-training step (it runs on the host every step under CA-DAS)."""
+training step (it runs on the host every step under CA-DAS).
+
+Also the wallclock feed for the Section-5.2.2 ratio calibration:
+:func:`measure_class_step_times` times the probe GEMM under each device
+class's execution context and returns the per-class
+:class:`~repro.tuning.ratio.ClassMeasurement` records that
+``AsymmetricMesh.from_calibration(backend="wallclock", measurements=...)``
+consumes.  On this one-CPU host the classes measure ~equal (the honest
+answer — the hardware *is* symmetric); on a real fleet the same records
+come from per-pod step times and the calibration lands on the true ratio.
+"""
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 from benchmarks.harness import Row, time_fn
 from repro.core import schedule as S
-from repro.core.asymmetric import AsymmetricMesh, DeviceClass
+from repro.core.asymmetric import AsymmetricMesh, DeviceClass, biglittle_classes
+from repro.kernels import ops
+from repro.tuning.ratio import ClassMeasurement
+
+
+def measure_class_step_times(
+    classes, probe_shape=(384, 384, 384), reps: int = 3
+) -> list[ClassMeasurement]:
+    """Wallclock per-class probe steps: the probe GEMM under each class's
+    execution context (its control tree picks backend + block shapes).
+
+    ``units`` is the probe's row count — the same unit the chunk tables
+    partition — so the records plug straight into
+    ``calibrate_class_ratios(backend="wallclock", measurements=...)``.
+    """
+
+    am = AsymmetricMesh(classes, tree_shape=probe_shape)
+    m, k, n = probe_shape
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    out = []
+    for c in classes:
+        with am.execution_context(c.name):
+            us = time_fn(lambda: jax.block_until_ready(ops.gemm(a, b)), reps=reps)
+        out.append(ClassMeasurement(name=c.name, units=m, seconds=us * 1e-6))
+    return out
 
 
 def run() -> list[Row]:
@@ -24,4 +64,19 @@ def run() -> list[Row]:
     us = time_fn(lambda: am.batch_layout(256), reps=20)
     imb = am.imbalance(am.batch_layout(256))
     rows.append(Row("sched_batch_layout_256", us, f"imbalance={imb:.3f}"))
+
+    # Wallclock ratio calibration off measured per-class step times (the
+    # ROADMAP item: feed calibrate_class_ratios real measurements).
+    classes = biglittle_classes(chips_per_pod=1)
+    meas = measure_class_step_times(classes)
+    cal_mesh = AsymmetricMesh.from_calibration(
+        classes, backend="wallclock", measurements=meas,
+        strategy="ca-das", batch_tile=2,
+    )
+    total_us = sum(m.seconds for m in meas) * 1e6
+    ratios = [round(float(r), 3) for r in cal_mesh.calibration.ratios]
+    rows.append(
+        Row("sched_wallclock_calibration", total_us,
+            f"ratios={ratios} split={cal_mesh.batch_layout(64).sizes}")
+    )
     return rows

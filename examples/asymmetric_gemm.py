@@ -22,21 +22,27 @@ import numpy as np
 from repro.core import blocking as B
 from repro.core import schedule as S
 from repro.core.control_tree import build_control_trees
+from repro.core.execution import context_for_tree
 from repro.kernels.ops import gemm
 from repro.kernels.ref import gemm_ref
 
 
 def run_partition(a, bm, table, trees):
-    """Execute C = A @ B row-block-wise per the chunk table; returns C."""
+    """Execute C = A @ B row-block-wise per the chunk table; returns C.
+
+    Each class's row panel runs under *its own* execution context — the
+    paper's Section-5.3 routing: the ambient control tree picks the block
+    config and micro-kernel, the call site stays bare.
+    """
 
     out = []
     for chunk in table.chunks:
         if chunk.size == 0:
             continue
         cls = "big" if chunk.cls == 0 else "little"
-        blk = trees[cls].block
         rows = a[chunk.start : chunk.stop]
-        out.append(gemm(rows, bm, config=blk, backend="xla"))
+        with context_for_tree(trees[cls]):
+            out.append(gemm(rows, bm))
     return jnp.concatenate(out, axis=0)
 
 

@@ -44,6 +44,18 @@ out = gemm_pallas(a, bm, cfg, interpret=True)
 err = float(jnp.max(jnp.abs(out - gemm_ref(a, bm))))
 print(f"[2] pallas blocked GEMM max|err| vs oracle: {err:.2e}")
 
+# 2b. class-routed execution: the same call under each class's context —
+# no config/backend threading; the ambient control tree decides.
+from repro.core.execution import context_for_tree
+from repro.kernels.ops import gemm
+
+for name, t in trees.items():
+    with context_for_tree(t):
+        out_ctx = gemm(a, bm)
+    err = float(jnp.max(jnp.abs(out_ctx - gemm_ref(a, bm))))
+    print(f"[2b] gemm under {name!r} context (backend={t.backend}): "
+          f"max|err|={err:.2e}")
+
 # 3. partitioning -------------------------------------------------------------
 sss = S.sss_partition(2048, 2)
 cadas = S.das_schedule(2048, rates=[4.0, 1.0], strides=[152, 32])

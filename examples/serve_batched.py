@@ -43,15 +43,21 @@ def main():
     decode = jax.jit(Z.make_decode_fn(cfg))
     state = Z.init_decode_state(cfg, args.batch, seq_cap)
 
+    # Decode under the serving class's control tree: the ambient context
+    # configures every projection matmul while the decode fn traces.
+    exec_ctx = asym.execution_context()
+    print(f"serving under device class {exec_ctx.device_class!r} "
+          f"(backend={exec_ctx.backend()})")
     t0 = time.time()
     logits = None
     toks = [prompts]
-    for t in range(args.prompt_len):
-        logits, state = decode(params, {"tokens": prompts[:, t:t+1]}, state, jnp.int32(t))
-    for t in range(args.prompt_len, seq_cap):
-        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        toks.append(nxt)
-        logits, state = decode(params, {"tokens": nxt}, state, jnp.int32(t))
+    with exec_ctx:
+        for t in range(args.prompt_len):
+            logits, state = decode(params, {"tokens": prompts[:, t:t+1]}, state, jnp.int32(t))
+        for t in range(args.prompt_len, seq_cap):
+            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            toks.append(nxt)
+            logits, state = decode(params, {"tokens": nxt}, state, jnp.int32(t))
     out = jnp.concatenate(toks, axis=1)
     dt = time.time() - t0
     print(f"arch={cfg.name} generated {args.gen_len} tokens x {args.batch} reqs "

@@ -61,6 +61,8 @@ def main():
         failure_hook=failure,
         pod_time_hook=pod_times,
     )
+    print(f"training under device class {trainer.exec_ctx.device_class!r} "
+          f"(backend={trainer.exec_ctx.backend()})")
     hist = trainer.run()
     print(f"arch={cfg.name} steps={len(hist)} restarts={trainer.restarts}")
     print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")

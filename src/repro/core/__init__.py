@@ -10,6 +10,12 @@ from repro.core.blocking import (
     derive_goto_blocking,
 )
 from repro.core.control_tree import ControlTree, build_control_trees
+from repro.core.execution import (
+    ExecutionContext,
+    context_for_tree,
+    current_context,
+    default_context,
+)
 from repro.core.schedule import (
     ChunkTable,
     DynamicScheduler,
@@ -24,6 +30,7 @@ __all__ = [
     "BlockConfig", "CacheHierarchy", "GotoBlocking", "TpuCoreSpec",
     "derive_block_config", "derive_goto_blocking",
     "ControlTree", "build_control_trees",
+    "ExecutionContext", "context_for_tree", "current_context", "default_context",
     "ChunkTable", "DynamicScheduler",
     "ca_sas_partition", "das_schedule", "sas_partition", "sss_partition",
     "AsymmetricMesh", "DeviceClass",

@@ -98,12 +98,17 @@ class AsymmetricMesh:
         strategy: str = "ca-das",
         batch_tile: int = 8,
         init_ratio: Optional[float] = None,
+        tree_shape: tuple[int, int, int] = (1024, 1024, 1024),
+        backend: str = "auto",
     ):
         if strategy not in ("sss", "sas", "ca-sas", "das", "ca-das"):
             raise ValueError(f"unknown strategy {strategy!r}")
         self.classes = list(classes)
         self.strategy = strategy
         self.batch_tile = batch_tile
+        self.tree_shape = tuple(tree_shape)  # canonical GEMM shape for the trees
+        self.backend = backend
+        self._trees: dict[tuple[int, int, int], dict] = {}
         self.calibration = None  # set by from_calibration()
         self.n_pods = sum(c.n_pods for c in self.classes)
         # Per-pod throughput weights (a class may own several pods).
@@ -130,6 +135,7 @@ class AsymmetricMesh:
         *,
         probe_shape: tuple[int, int, int] = (1024, 1024, 1024),
         backend: str = "cost-model",
+        measurements=None,
         **kwargs,
     ) -> "AsymmetricMesh":
         """Build a mesh whose per-class throughputs are *measured*, not typed.
@@ -137,15 +143,23 @@ class AsymmetricMesh:
         Runs (or accepts) a :class:`repro.tuning.ratio.Calibration` over
         ``classes`` and replaces each class's hand-set ``rel_throughput``
         with the calibrated ratio — the paper's Section 5.2.2 knob, set
-        empirically.  The result seeds ``DynamicScheduler.init_ratios``;
-        the between-steps feedback keeps refining from there.
+        empirically.  With ``backend="wallclock"`` pass ``measurements``
+        (per-class :class:`~repro.tuning.ratio.ClassMeasurement` records,
+        e.g. from ``benchmarks.bench_schedulers.measure_class_step_times``
+        or real per-pod step times) — one host cannot wallclock-compare
+        heterogeneous core specs itself.  The result seeds
+        ``DynamicScheduler.init_ratios``; the between-steps feedback keeps
+        refining from there.
         """
 
         from repro.tuning.ratio import calibrate_class_ratios
 
         if calibration is None:
             calibration = calibrate_class_ratios(
-                classes, probe_shape=probe_shape, backend=backend
+                classes,
+                probe_shape=probe_shape,
+                backend=backend,
+                measurements=measurements,
             )
         if len(calibration.ratios) != len(classes):
             raise ValueError(
@@ -161,15 +175,79 @@ class AsymmetricMesh:
         return mesh
 
     def _tiles(self) -> list[int]:
-        # CA: each pod's chunk aligns to its own microbatch tile — a class
-        # with fewer chips / less VMEM gets a smaller stride, mirroring the
-        # per-class m_c of the paper.
+        # CA: each pod's chunk aligns to its own microbatch tile — a slower
+        # class gets a proportionally *smaller* stride, mirroring the
+        # per-class m_c of the paper (A15 m_c=152 vs A7 m_c=32).  The
+        # fastest class keeps the full batch_tile; others scale down by
+        # their relative throughput, floored at 1.
+        top = max(cc.rel_throughput for cc in self.classes)
         out = []
         for _, c in self._pod_class:
-            scale = max(1, int(round(c.rel_throughput / max(
-                cc.rel_throughput for cc in self.classes))))
-            out.append(self.batch_tile * scale)
+            out.append(max(1, int(round(self.batch_tile * c.rel_throughput / top))))
         return out
+
+    # -- execution contexts (per-class control trees) ---------------------
+
+    def _primary_class(self) -> DeviceClass:
+        """The fastest class (ties broken by listed order) — the anchor."""
+
+        return max(self.classes, key=lambda c: c.rel_throughput)
+
+    def control_trees(self, shape: Optional[tuple[int, int, int]] = None) -> dict:
+        """Per-class control trees for ``shape`` (default: ``tree_shape``).
+
+        Built once per shape and memoized.  The *fastest* class anchors
+        the shared-B-panel ``bk`` regardless of listing order (classes are
+        sorted by throughput before ``build_control_trees``, whose first
+        entry is the anchor) — so the primary class never trains with
+        panel strides constrained by a slow class's VMEM.  Each class's
+        block config resolves through the tuning cache for *its own* core
+        spec, falling back to the analytical derivation.
+        """
+
+        from repro.core import execution as X
+        from repro.core.control_tree import build_control_trees
+
+        shape = tuple(shape) if shape is not None else self.tree_shape
+        trees = self._trees.get(shape)
+        if trees is None:
+            ordered = sorted(
+                self.classes, key=lambda c: -c.rel_throughput
+            )  # stable: listed order breaks ties
+            specs = {c.name: c.spec for c in ordered}
+            trees = build_control_trees(
+                specs, *shape, backend=X.resolve_backend(self.backend)
+            )
+            self._trees[shape] = trees
+        return trees
+
+    def execution_context(
+        self,
+        class_name: Optional[str] = None,
+        *,
+        shape: Optional[tuple[int, int, int]] = None,
+    ):
+        """An :class:`~repro.core.execution.ExecutionContext` for one class.
+
+        ``class_name=None`` binds the fastest class (ties broken by listed
+        order) — the tree the single SPMD program runs under when the mesh
+        is homogeneous-per-program.  Activate it around jit tracing /
+        calls::
+
+            with mesh.execution_context("little"):
+                y = ops.gemm(x, w)   # little's tuned tree governs
+        """
+
+        from repro.core.execution import ExecutionContext
+
+        trees = self.control_trees(shape)
+        if class_name is None:
+            class_name = self._primary_class().name  # same anchor as the trees
+        if class_name not in trees:
+            raise KeyError(
+                f"unknown device class {class_name!r}; have {sorted(trees)}"
+            )
+        return ExecutionContext(device_class=class_name, tree=trees[class_name])
 
     # -- scheduling -------------------------------------------------------
 

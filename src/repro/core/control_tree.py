@@ -11,12 +11,21 @@ Here a :class:`ControlTree` carries, per device class:
   * the Pallas :class:`~repro.core.blocking.BlockConfig` (the loop strides),
   * the coarse/fine loop choice (which axis is partitioned across classes
     vs within a class — the paper's Loop 1/3 × Loop 4/5 grid),
-  * the micro-kernel selection (XLA dot vs Pallas GEMM vs interpret mode).
+  * the micro-kernel selection (a name in the
+    :data:`repro.core.execution.BACKENDS` dispatch table).
 
 :func:`build_control_trees` reproduces the Section 5.3 dependency: if the
 coarse axis is the *rows* axis (the paper's Loop 3), the staged B panel is
 shared between classes, forcing a common ``bk`` and a re-derived (smaller)
-``bm`` for classes with less fast memory.
+``bm`` for classes with less fast memory.  Each class's block config first
+consults the ``$REPRO_TUNING_CACHE`` entry for *its own* core spec (the
+paper's per-class empirical optimum), falling back to the analytical
+derivation; ``block_source`` records which path won.
+
+Trees are *activated*, not hand-threaded: wrap them in an
+:class:`~repro.core.execution.ExecutionContext` (usually via
+``AsymmetricMesh.execution_context``) and every ``ops.gemm`` underneath
+runs under the class's configuration.
 """
 
 from __future__ import annotations
@@ -25,10 +34,11 @@ import dataclasses
 from typing import Literal, Mapping, Optional
 
 from repro.core import blocking as B
+from repro.core import execution as X
+from repro.core.execution import Backend  # one backend vocabulary (re-export)
 
 CoarseLoop = Literal["cols", "rows"]  # paper's Loop 1 (j_c/n) vs Loop 3 (i_c/m)
 FineLoop = Literal["loop4", "loop5", "both"]
-Backend = Literal["xla", "pallas", "pallas_interpret"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +53,12 @@ class ControlTree:
     # TPU spec used to derive `block`; kept for re-derivation under
     # shared-panel constraints.
     spec: B.TpuCoreSpec = B.TPU_V5E
+    # Provenance of `block`: "tuned" (cache hit for this class's spec) or
+    # "analytical" (Section-3.3 derivation / shared-panel re-derivation).
+    block_source: str = "analytical"
+    # (m, k, n) the tree was built for; execution contexts reuse `block`
+    # verbatim for calls in the same 128-lane shape bucket.
+    problem_shape: Optional[tuple[int, int, int]] = None
 
     def with_block(self, block: B.BlockConfig) -> "ControlTree":
         return dataclasses.replace(self, block=block)
@@ -59,6 +75,7 @@ def build_control_trees(
     backend: Backend = "xla",
     cache_aware: bool = True,
     dtype_bytes: int = 2,
+    use_cache: bool = True,
 ) -> dict[str, ControlTree]:
     """One control tree per device class (paper Sections 5.1/5.3).
 
@@ -69,25 +86,59 @@ def build_control_trees(
     forced to the first class's value and each other class re-derives the
     largest ``bm`` that fits its own VMEM at that ``bk`` — the exact
     structure of the paper's ``k_c = 952 -> m_c = 32`` adjustment.
+
+    With ``use_cache=True`` (default) each class's config is resolved
+    through :func:`repro.core.execution.resolve_block_config`: the active
+    ``$REPRO_TUNING_CACHE`` entry for that class's spec wins, the
+    analytical derivation is the fallback — with no cache env var set this
+    is exactly the old behavior.  Under the shared-B-panel constraint a
+    tuned entry is honored only if it agrees on the shared ``bk``;
+    otherwise the class falls back to the ``bm`` re-derivation (a tuned
+    panel stride cannot override the panel it shares).
     """
 
     names = list(specs)
     if not names:
         raise ValueError("need at least one device class")
     first = names[0]
-    base = B.derive_block_config(m, k, n, spec=specs[first], dtype_bytes=dtype_bytes)
+    dtype_name = X.dtype_name_for_bytes(dtype_bytes)
+
+    def _resolve(spec: B.TpuCoreSpec) -> tuple[B.BlockConfig, str]:
+        if use_cache:
+            return X.resolve_block_config(
+                m, k, n, spec=spec, dtype_name=dtype_name, dtype_bytes=dtype_bytes
+            )
+        return (
+            B.derive_block_config(m, k, n, spec=spec, dtype_bytes=dtype_bytes),
+            "analytical",
+        )
+
+    base, base_src = _resolve(specs[first])
     trees: dict[str, ControlTree] = {}
     for name in names:
-        if not cache_aware:
-            blk = base
-        elif name == first:
-            blk = base
+        if not cache_aware or name == first:
+            blk, src = base, base_src
         elif coarse_loop == "rows":
-            # Shared B panel: common bk, re-derive bm for this class's VMEM.
-            blk = _rederive_bm(specs[name], base, dtype_bytes)
+            # Shared B panel: a tuned entry for this class may only be used
+            # if it agrees on the common bk; otherwise re-derive bm for
+            # this class's VMEM at the shared bk.
+            tuned = (
+                X.tuned_block_config(
+                    m, k, n,
+                    spec=specs[name],
+                    dtype_name=dtype_name,
+                    dtype_bytes=dtype_bytes,
+                )
+                if use_cache
+                else None
+            )
+            if tuned is not None and tuned.bk == base.bk:
+                blk, src = tuned, "tuned"
+            else:
+                blk, src = _rederive_bm(specs[name], base, dtype_bytes), "analytical"
         else:
-            # Independent panels (Loop 1): fully independent derivation.
-            blk = B.derive_block_config(m, k, n, spec=specs[name], dtype_bytes=dtype_bytes)
+            # Independent panels (Loop 1): fully independent resolution.
+            blk, src = _resolve(specs[name])
         trees[name] = ControlTree(
             device_class=name,
             block=blk,
@@ -95,6 +146,8 @@ def build_control_trees(
             fine_loop=fine_loop,
             backend=backend,
             spec=specs[name],
+            block_source=src,
+            problem_shape=(m, k, n),
         )
     return trees
 

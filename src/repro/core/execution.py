@@ -1,0 +1,346 @@
+"""Class-routed execution contexts: one ambient control tree per device class.
+
+The paper's central mechanism (Section 5.3) is that *every* micro-kernel
+invocation runs under the executing core class's control tree — the tree
+picks both the blocking parameters and the micro-kernel implementation.
+This module is the jax_pallas realization of that routing:
+
+  * :class:`ExecutionContext` — a context-manager binding one device
+    class's :class:`~repro.core.control_tree.ControlTree` as the *ambient*
+    configuration.  Every :func:`repro.kernels.ops.gemm` /
+    :func:`~repro.kernels.ops.linear` call anywhere in the model zoo
+    resolves its backend and block shapes from the active context instead
+    of per-call arguments, so model code never hand-threads
+    ``config=``/``backend=``.
+  * the **backend dispatch table** (:data:`BACKENDS`) — the single
+    vocabulary of micro-kernel implementations (previously scattered
+    across ``ops.py``'s if/elif chain, ``control_tree.py``'s ``Backend``
+    literal, and the ``_on_tpu()`` auto-probe).
+  * :func:`resolve_block_config` — the single tuned-or-analytical
+    resolution path: the ``$REPRO_TUNING_CACHE`` entry for the class's
+    core spec wins, the Section-3.3 analytical derivation is the fallback.
+
+With **no context active** every call behaves exactly as before this layer
+existed: ``backend="auto"`` probes the JAX backend (Pallas on TPU, XLA
+otherwise) and ``config=None`` resolves via the env-var cache keyed by
+``$REPRO_TUNING_SPEC`` — bit-identical defaults.
+
+Contexts nest: entering a context shadows the outer one, exiting restores
+it (exception-safe).  All state lives in :mod:`contextvars` (the active
+context plus a per-thread/per-task token stack), so one shared context
+object may be entered concurrently from several threads or asyncio tasks
+— enter/exit just have to pair up locally, as with any context manager.
+Explicit per-call arguments always win over the ambient context — the
+context only fills ``backend="auto"`` and ``config=None`` holes.
+"""
+
+from __future__ import annotations
+
+import contextvars
+import dataclasses
+from typing import TYPE_CHECKING, Callable, Literal, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import TPU_V5E, BlockConfig, TpuCoreSpec, derive_block_config
+
+if TYPE_CHECKING:  # control_tree imports Backend from here; keep it one-way.
+    from repro.core.control_tree import ControlTree
+
+# ---------------------------------------------------------------------------
+# Backend dispatch table (the one backend vocabulary)
+# ---------------------------------------------------------------------------
+
+Backend = Literal["xla", "pallas", "pallas_interpret"]
+
+
+def _xla_gemm(a2, b, config, out_dtype):
+    # Declare the dot output in the compute dtype: the MXU still
+    # accumulates fp32 per shard, but GSPMD then places the
+    # tensor-parallel all-reduce on the bf16 tensor instead of an fp32
+    # intermediate — half the wire bytes on every row-parallel
+    # projection (EXPERIMENTS.md §Perf A).
+    pet = jnp.float32 if out_dtype == jnp.float32 else out_dtype
+    return jnp.dot(a2, b, preferred_element_type=pet).astype(out_dtype)
+
+
+def _pallas_gemm(a2, b, config, out_dtype):
+    from repro.kernels.gemm import gemm_pallas
+
+    return gemm_pallas(a2, b, config, out_dtype=out_dtype)
+
+
+def _pallas_interpret_gemm(a2, b, config, out_dtype):
+    from repro.kernels.gemm import gemm_pallas
+
+    return gemm_pallas(a2, b, config, out_dtype=out_dtype, interpret=True)
+
+
+# name -> (a2, b, config, out_dtype) -> 2-D result.  The keys are the only
+# backend names the stack accepts; ``"auto"`` is a request resolved by
+# :func:`resolve_backend`, never a table entry.
+BACKENDS: dict[str, Callable] = {
+    "xla": _xla_gemm,
+    "pallas": _pallas_gemm,
+    "pallas_interpret": _pallas_interpret_gemm,
+}
+
+BACKEND_NAMES: tuple[str, ...] = tuple(BACKENDS)
+
+
+def on_tpu() -> bool:
+    """The auto-probe: is the default JAX backend a TPU?"""
+
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def resolve_backend(name: str) -> str:
+    """Collapse ``"auto"`` to a concrete table entry; validate the rest."""
+
+    if name == "auto":
+        return "pallas" if on_tpu() else "xla"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}")
+    return name
+
+
+def dispatch_gemm(a2, b, *, config=None, backend: str = "auto", out_dtype=None):
+    """Route a 2-D GEMM through the backend table (the kernels' funnel)."""
+
+    out_dtype = out_dtype or a2.dtype
+    return BACKENDS[resolve_backend(backend)](a2, b, config, out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block-config resolution (tuned cache -> analytical fallback)
+# ---------------------------------------------------------------------------
+
+_DTYPE_NAMES = {1: "int8", 2: "bfloat16", 4: "float32"}
+
+
+def dtype_name_for_bytes(dtype_bytes: int) -> str:
+    return _DTYPE_NAMES.get(dtype_bytes, f"bytes{dtype_bytes}")
+
+
+def tuned_block_config(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    spec: Optional[TpuCoreSpec] = None,
+    dtype_name: str = "bfloat16",
+    dtype_bytes: int = 2,
+) -> Optional[BlockConfig]:
+    """The ``$REPRO_TUNING_CACHE`` entry for this (spec, dtype, shape), or None.
+
+    ``spec=None`` keeps today's kernel-path behavior: the cache key's spec
+    name comes from ``$REPRO_TUNING_SPEC`` (default ``tpu-v5e``).
+    """
+
+    from repro.tuning.cache import cached_block_config
+
+    return cached_block_config(
+        m, k, n, dtype_name, dtype_bytes,
+        spec_name=spec.name if spec is not None else None,
+    )
+
+
+def resolve_block_config(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    spec: Optional[TpuCoreSpec] = None,
+    dtype_name: str = "bfloat16",
+    dtype_bytes: int = 2,
+) -> tuple[BlockConfig, str]:
+    """Tuned config on cache hit, analytical derivation on miss.
+
+    Returns ``(config, source)`` with ``source in ("tuned", "analytical")``
+    so callers (control trees, tests) can record provenance.
+    """
+
+    cfg = tuned_block_config(
+        m, k, n, spec=spec, dtype_name=dtype_name, dtype_bytes=dtype_bytes
+    )
+    if cfg is not None:
+        return cfg, "tuned"
+    return (
+        derive_block_config(m, k, n, spec=spec or TPU_V5E, dtype_bytes=dtype_bytes),
+        "analytical",
+    )
+
+
+# ---------------------------------------------------------------------------
+# The execution context itself
+# ---------------------------------------------------------------------------
+
+
+def _same_bucket(a: tuple[int, int, int], b: tuple[int, int, int]) -> bool:
+    """Do two problem shapes pad to the same 128-lane MXU tile per dim?
+
+    Uses the tuning cache's own bucket function so block-config reuse
+    decisions can never drift from the cache-key bucketing.
+    """
+
+    from repro.tuning.cache import _bucket
+
+    return all(_bucket(x) == _bucket(y) for x, y in zip(a, b))
+
+
+_ACTIVE: contextvars.ContextVar[Optional["ExecutionContext"]] = contextvars.ContextVar(
+    "repro_execution_context", default=None
+)
+# LIFO of reset tokens for the enters made *in the current thread/task*.
+# Held in a ContextVar of immutable tuples: each asyncio task (copied
+# context) and each thread sees its own stack, so a single shared
+# ExecutionContext instance can be entered concurrently everywhere —
+# enter/exit only have to pair up locally, as with any context manager.
+_TOKENS: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "repro_execution_tokens", default=()
+)
+
+
+@dataclasses.dataclass
+class ExecutionContext:
+    """Ambient per-device-class execution configuration (a context manager).
+
+    Binds one class's control tree: ``ops.gemm`` calls under this context
+    take their backend from ``tree.backend`` and, for Pallas backends,
+    resolve their block shapes per call shape from the tuning cache keyed
+    by ``tree.spec`` (falling back to the analytical derivation for that
+    spec).  ``tree.block`` itself is the canonical-shape config carrying
+    the Section-5.3 shared-panel structure; per-call shapes re-resolve so
+    a little-VMEM class never inherits a big-class block it cannot hold.
+    """
+
+    device_class: str
+    tree: "ControlTree"
+
+    def __enter__(self) -> "ExecutionContext":
+        # Token bookkeeping lives in _TOKENS (per-thread *and* per-task),
+        # never on the instance: one long-lived context (e.g. a Trainer's)
+        # may be entered concurrently from threads and asyncio tasks.
+        token = _ACTIVE.set(self)
+        _TOKENS.set(_TOKENS.get() + (token,))
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        stack = _TOKENS.get()
+        _TOKENS.set(stack[:-1])
+        _ACTIVE.reset(stack[-1])
+        return False
+
+    @property
+    def spec(self) -> TpuCoreSpec:
+        return self.tree.spec
+
+    def backend(self) -> str:
+        """The concrete dispatch-table entry this context routes to."""
+
+        return resolve_backend(self.tree.backend)
+
+    def block_config(
+        self, m: int, k: int, n: int, dtype_name: str, dtype_bytes: int
+    ) -> BlockConfig:
+        """Per-call-shape block config for this class (tuned or analytical).
+
+        ``tree.block`` carries either a hand-picked configuration (trees
+        built directly, no ``problem_shape`` recorded) or the Section-5.3
+        shared-panel constraint, neither of which a fresh per-spec
+        derivation can reconstruct — so it is reused whenever it can be.
+
+        Hand-built trees are authoritative (the old ``gemm_with_tree``
+        semantics): their block is used verbatim on a dtype match, or with
+        the operand bytes re-labelled otherwise (same shapes), with a
+        fresh derivation only if the re-labelled working set overflows
+        this class's VMEM.
+
+        Mesh-built trees reuse ``tree.block`` for calls padding into the
+        same 128-lane bucket the tree was built for.  Resolution order:
+        tree.block on a dtype match; else a tuned cache entry for this
+        class's spec at the call's actual dtype — under a Loop-3 (rows)
+        tree only if it agrees on the shared ``bk``, the same rule
+        ``build_control_trees`` enforces; else the dtype-re-labelled
+        tree.block (VMEM-fit guarded).  Off-bucket shapes re-resolve
+        against this class's spec.
+        """
+
+        tree = self.tree
+        hand_built = tree.problem_shape is None
+        reuse = hand_built or _same_bucket((m, k, n), tree.problem_shape)
+        if reuse and tree.block.dtype_bytes == dtype_bytes:
+            return tree.block
+        if reuse:
+            relabeled = dataclasses.replace(tree.block, dtype_bytes=dtype_bytes)
+            if hand_built and relabeled.fits(tree.spec):
+                return relabeled
+        tuned = tuned_block_config(
+            m, k, n, spec=tree.spec, dtype_name=dtype_name, dtype_bytes=dtype_bytes
+        )
+        if tuned is not None and (
+            not reuse or tree.coarse_loop != "rows" or tuned.bk == tree.block.bk
+        ):
+            return tuned
+        if reuse and not hand_built and relabeled.fits(tree.spec):
+            return relabeled
+        return derive_block_config(
+            m, k, n, spec=tree.spec, dtype_bytes=dtype_bytes
+        )
+
+
+def current_context() -> Optional[ExecutionContext]:
+    """The innermost active context, or None (→ pre-context defaults)."""
+
+    return _ACTIVE.get()
+
+
+def context_for_tree(tree: "ControlTree") -> ExecutionContext:
+    """Wrap an existing control tree (e.g. one of ``build_control_trees``)."""
+
+    return ExecutionContext(device_class=tree.device_class, tree=tree)
+
+
+def default_context(
+    *,
+    spec: Optional[TpuCoreSpec] = None,
+    shape: tuple[int, int, int] = (1024, 1024, 1024),
+    backend: str = "auto",
+    device_class: Optional[str] = None,
+) -> ExecutionContext:
+    """A single-class context for homogeneous runs (dry-run, plain serving).
+
+    With no tuning cache active this is behavior-neutral: the tree holds
+    the analytical config and the auto-resolved backend, exactly what a
+    bare ``ops.gemm`` call would pick.
+    """
+
+    from repro.core.control_tree import build_control_trees
+
+    spec = spec or TPU_V5E
+    name = device_class or spec.name
+    trees = build_control_trees(
+        {name: spec}, *shape, backend=resolve_backend(backend)
+    )
+    return ExecutionContext(device_class=name, tree=trees[name])
+
+
+__all__ = [
+    "Backend",
+    "BACKENDS",
+    "BACKEND_NAMES",
+    "ExecutionContext",
+    "context_for_tree",
+    "current_context",
+    "default_context",
+    "dispatch_gemm",
+    "dtype_name_for_bytes",
+    "on_tpu",
+    "resolve_backend",
+    "resolve_block_config",
+    "tuned_block_config",
+]

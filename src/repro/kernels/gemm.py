@@ -42,25 +42,25 @@ except Exception:  # pragma: no cover
     pltpu = None
     _VMEM = None
 
-from repro.core.blocking import BlockConfig, derive_block_config, pad_to_blocks
+from repro.core.blocking import BlockConfig, pad_to_blocks
 
 
 def resolve_block_config(m: int, k: int, n: int, dtype) -> BlockConfig:
     """Config used when the caller passes ``cfg=None``.
 
-    With ``$REPRO_TUNING_CACHE`` set, the tuned entry for this
+    Delegates to the single resolution path in
+    :func:`repro.core.execution.resolve_block_config`: with
+    ``$REPRO_TUNING_CACHE`` set, the tuned entry for this
     (spec, dtype, shape bucket) wins; otherwise — and always when the env
     var is unset — the analytical derivation is used, so defaults are
     unchanged.  The kernel itself is identical either way; only the block
     shapes differ.
     """
 
-    from repro.tuning.cache import cached_block_config
+    from repro.core.execution import resolve_block_config as _resolve
 
-    cfg = cached_block_config(m, k, n, dtype.name, dtype.itemsize)
-    if cfg is not None:
-        return cfg
-    return derive_block_config(m, k, n, dtype_bytes=dtype.itemsize)
+    cfg, _ = _resolve(m, k, n, dtype_name=dtype.name, dtype_bytes=dtype.itemsize)
+    return cfg
 
 
 def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref):

@@ -1,4 +1,4 @@
-"""Jit'd public entry points for the kernels, control-tree aware.
+"""Jit'd public entry points for the kernels, execution-context aware.
 
 ``gemm`` is the operation the whole framework routes its projection /
 FFN matmuls through.  Backend dispatch mirrors the paper's control-tree
@@ -7,7 +7,15 @@ the blocking parameters *and* the micro-kernel implementation
 (paper Section 5.3: "opens the door to the use of specific highly-tuned
 micro-kernels adapted to each micro-architecture").
 
-Backends:
+Routing happens through :mod:`repro.core.execution`: an ambient
+:class:`~repro.core.execution.ExecutionContext` (activated by the trainer,
+server, benchmarks, or ``AsymmetricMesh.execution_context``) supplies the
+backend and per-class block shapes, so model code calls ``gemm(a, b)``
+bare.  Explicit ``config=``/``backend=`` arguments always win over the
+context; with no context active the pre-context defaults apply unchanged
+(``"auto"`` probes TPU, ``config=None`` resolves via the env-var cache).
+
+Backends (the dispatch table lives in ``execution.BACKENDS``):
 
   * ``"xla"``              — jnp.dot (the portable reference path; also what
                              the SPMD dry-run lowers, since Mosaic cannot
@@ -20,19 +28,11 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.blocking import BlockConfig, derive_block_config
+from repro.core import execution as X
+from repro.core.blocking import BlockConfig
 from repro.core.control_tree import ControlTree
-from repro.kernels.gemm import gemm_pallas
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover
-        return False
 
 
 def gemm(
@@ -56,30 +56,24 @@ def gemm(
     k = a.shape[-1]
     a2 = a.reshape(-1, k)
 
-    if backend == "auto":
-        backend = "pallas" if _on_tpu() else "xla"
+    ctx = X.current_context()
+    if ctx is not None:
+        if backend == "auto":
+            backend = ctx.tree.backend
+        if config is None and X.resolve_backend(backend) != "xla":
+            config = ctx.block_config(
+                a2.shape[0], k, b.shape[1], a2.dtype.name, a2.dtype.itemsize
+            )
 
-    if backend == "xla":
-        # Declare the dot output in the compute dtype: the MXU still
-        # accumulates fp32 per shard, but GSPMD then places the
-        # tensor-parallel all-reduce on the bf16 tensor instead of an fp32
-        # intermediate — half the wire bytes on every row-parallel
-        # projection (EXPERIMENTS.md §Perf A).
-        pet = jnp.float32 if out_dtype == jnp.float32 else out_dtype
-        out = jnp.dot(a2, b, preferred_element_type=pet).astype(out_dtype)
-    elif backend == "pallas":
-        out = gemm_pallas(a2, b, config, out_dtype=out_dtype)
-    elif backend == "pallas_interpret":
-        out = gemm_pallas(a2, b, config, out_dtype=out_dtype, interpret=True)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
+    out = X.dispatch_gemm(a2, b, config=config, backend=backend, out_dtype=out_dtype)
     return out.reshape(*lead, b.shape[1])
 
 
 def gemm_with_tree(a: jnp.ndarray, b: jnp.ndarray, tree: ControlTree, out_dtype=None):
     """GEMM configured by a device class's control tree."""
 
-    return gemm(a, b, config=tree.block, backend=tree.backend, out_dtype=out_dtype)
+    with X.context_for_tree(tree):
+        return gemm(a, b, out_dtype=out_dtype)
 
 
 def linear(x, w, b=None, *, config=None, backend: str = "auto"):

@@ -34,6 +34,7 @@ import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config, list_configs  # noqa: E402
+from repro.core import execution as X  # noqa: E402
 from repro.distributed import sharding as SH  # noqa: E402
 from repro.launch import hlo_analysis  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -114,9 +115,15 @@ def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
 
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
              force: bool = False, remat: bool = True, fsdp: bool = True,
-             seq_shard: bool = True, tag: str = "") -> dict:
+             seq_shard: bool = True, tag: str = "", spec_name: str = "tpu-v5e") -> dict:
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
-    cell_id = f"{arch_name}__{shape_name}__{mesh_tag}" + (f"__{tag}" if tag else "")
+    # Non-default specs get their own cell files — otherwise a --spec run
+    # would silently return records lowered under a different context.
+    cell_id = (
+        f"{arch_name}__{shape_name}__{mesh_tag}"
+        + (f"__{spec_name}" if spec_name != "tpu-v5e" else "")
+        + (f"__{tag}" if tag else "")
+    )
     path = os.path.join(out_dir, cell_id + ".json")
     if os.path.exists(path) and not force:
         with open(path) as f:
@@ -139,17 +146,25 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = int(np.prod(list(mesh.shape.values())))
     try:
+        from repro.tuning.candidates import get_spec
+
         t0 = time.time()
-        fn, args, in_sh, out_sh = build_cell(
-            arch_name, shape_name, mesh, remat=remat, fsdp=fsdp, seq_shard=seq_shard
-        )
-        # Donate the big mutable state: params+opt for train (step output
-        # aliases input), the KV/SSM caches for decode.
-        donate = (0, 1) if len(args) == 3 else ((2,) if len(args) == 4 else ())
-        with mesh:
-            lowered = jax.jit(
-                fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
-            ).lower(*args)
+        # Lower under the target class's execution context: with a tuning
+        # cache active the cell's matmuls pick up the per-spec tuned block
+        # configs; without one this is behavior-neutral (analytical +
+        # auto backend, exactly the bare defaults).
+        exec_ctx = X.default_context(spec=get_spec(spec_name))
+        with exec_ctx:
+            fn, args, in_sh, out_sh = build_cell(
+                arch_name, shape_name, mesh, remat=remat, fsdp=fsdp, seq_shard=seq_shard
+            )
+            # Donate the big mutable state: params+opt for train (step output
+            # aliases input), the KV/SSM caches for decode.
+            donate = (0, 1) if len(args) == 3 else ((2,) if len(args) == 4 else ())
+            with mesh:
+                lowered = jax.jit(
+                    fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+                ).lower(*args)
         t_lower = time.time() - t0
         t0 = time.time()
         compiled = lowered.compile()
@@ -162,6 +177,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
 
         rec.update(
             ok=True,
+            device_class=exec_ctx.device_class,
             n_chips=n_chips,
             lower_s=round(t_lower, 2),
             compile_s=round(t_compile, 2),
@@ -204,6 +220,10 @@ def main():
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--no-seq-shard", action="store_true")
+    from repro.tuning.candidates import SPECS
+
+    ap.add_argument("--spec", default="tpu-v5e", choices=sorted(SPECS),
+                    help="core spec whose execution context lowers the cells")
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
@@ -231,6 +251,7 @@ def main():
                     fsdp=not args.no_fsdp,
                     seq_shard=not args.no_seq_shard,
                     tag=args.tag,
+                    spec_name=args.spec,
                 )
                 if rec.get("skipped"):
                     n_skip += 1

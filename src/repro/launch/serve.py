@@ -58,6 +58,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--strategy", default="ca-das")
+    ap.add_argument("--device-class", default=None,
+                    help="serve under this class's control tree (default: fastest)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -80,12 +82,18 @@ def main():
     prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len), dtype=np.int32)
     seq_cap = args.prompt_len + args.gen_len
 
+    # Every decode matmul runs under the serving class's control tree —
+    # the context is active while the decode fn traces (first call).
+    exec_ctx = asym.execution_context(args.device_class)
     t0 = time.time()
-    out = generate(cfg, params, jnp.asarray(prompts), args.gen_len, seq_cap)
+    with exec_ctx:
+        out = generate(cfg, params, jnp.asarray(prompts), args.gen_len, seq_cap)
     dt = time.time() - t0
     tput = args.batch * args.gen_len / dt
     print(json.dumps({
         "arch": cfg.name,
+        "device_class": exec_ctx.device_class,
+        "exec_backend": exec_ctx.backend(),
         "batch": args.batch,
         "generated": out.shape[1] - args.prompt_len,
         "wall_s": round(dt, 2),

@@ -18,6 +18,7 @@ import time
 import jax
 
 from repro.configs import get_config
+from repro.core import execution
 from repro.core.asymmetric import AsymmetricMesh, DeviceClass, biglittle_classes
 from repro.distributed import sharding as SH
 from repro.launch.mesh import make_host_mesh, make_production_mesh
@@ -62,6 +63,13 @@ def main():
         )
         asym = AsymmetricMesh(classes, strategy=args.strategy, batch_tile=2)
 
+    # Class-routed execution: the asymmetric mesh's primary control tree
+    # governs every matmul in the step; homogeneous runs get the default
+    # single-class context (behavior-neutral without a tuning cache).
+    exec_ctx = (
+        asym.execution_context() if asym is not None else execution.default_context()
+    )
+
     tcfg = TrainerConfig(
         steps=args.steps,
         global_batch=args.global_batch,
@@ -76,6 +84,7 @@ def main():
         tcfg=tcfg,
         opt_cfg=AdamWConfig(lr=args.lr, total_steps=args.steps),
         asym=asym,
+        exec_ctx=exec_ctx,
     )
     t0 = time.time()
     history = trainer.run()
@@ -84,6 +93,8 @@ def main():
         json.dumps(
             {
                 "arch": cfg.name,
+                "device_class": exec_ctx.device_class,
+                "exec_backend": exec_ctx.backend(),
                 "steps": len(history),
                 "first_loss": history[0]["loss"],
                 "last_loss": history[-1]["loss"],

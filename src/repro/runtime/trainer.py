@@ -3,6 +3,11 @@
 Composes every substrate:
 
   * model zoo loss fn (+ masked loss for padded asymmetric batches),
+  * class-routed execution: the whole step traces under an
+    :class:`~repro.core.execution.ExecutionContext` (the asymmetric
+    mesh's primary control tree by default), so every projection/FFN/
+    lm-head matmul resolves its backend and block config from the
+    paper's per-class mechanism — no per-call threading (DESIGN.md §3),
   * grad accumulation + AdamW (fp32 master params, sharded opt state),
   * checkpoint/restart: periodic async snapshots; any exception classified
     as a *node failure* triggers restore-from-latest and continue (the
@@ -17,6 +22,7 @@ Composes every substrate:
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Optional
@@ -28,6 +34,7 @@ import numpy as np
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import ArchConfig
 from repro.core.asymmetric import AsymmetricMesh
+from repro.core.execution import ExecutionContext
 from repro.data.pipeline import AsymmetricBatcher, SyntheticLM
 from repro.distributed import sharding as SH
 from repro.models import model_zoo as Z
@@ -60,6 +67,7 @@ class Trainer:
         tcfg: TrainerConfig,
         opt_cfg: Optional[O.AdamWConfig] = None,
         asym: Optional[AsymmetricMesh] = None,
+        exec_ctx: Optional[ExecutionContext] = None,
         failure_hook: Optional[Callable[[int], None]] = None,
         pod_time_hook: Optional[Callable[[int], list]] = None,
         seed: int = 0,
@@ -69,6 +77,14 @@ class Trainer:
         self.tcfg = tcfg
         self.opt_cfg = opt_cfg or O.AdamWConfig(total_steps=tcfg.steps)
         self.asym = asym
+        # Every matmul in the step runs under this context (paper §5.3:
+        # the executing class's control tree).  Defaults to the asymmetric
+        # mesh's primary (fastest) class — the single SPMD program is
+        # configured for the class that anchors the shared B panel; with
+        # no asym mesh the pre-context defaults apply unchanged.
+        self.exec_ctx = exec_ctx if exec_ctx is not None else (
+            asym.execution_context() if asym is not None else None
+        )
         self.failure_hook = failure_hook
         self.pod_time_hook = pod_time_hook
         self.ckpt = Checkpointer(tcfg.ckpt_dir)
@@ -80,6 +96,11 @@ class Trainer:
 
         self._build()
 
+    def _execution(self):
+        """The ambient execution context for tracing/running the step."""
+
+        return self.exec_ctx if self.exec_ctx is not None else contextlib.nullcontext()
+
     # -- compilation --------------------------------------------------------
 
     def _build(self):
@@ -90,7 +111,7 @@ class Trainer:
         self.param_sharding = SH.shard_params(abstract, mesh, fsdp=self.tcfg.fsdp)
         self.opt_sharding = SH.shard_opt_state(None, self.param_sharding, mesh)
 
-        with mesh:
+        with mesh, self._execution():
             self.params = jax.jit(
                 lambda k: Z.init_params(k, arch), out_shardings=self.param_sharding
             )(jax.random.PRNGKey(self.seed))
@@ -198,7 +219,9 @@ class Trainer:
                     self.failure_hook(self.step)
                 batch, layout = self._next_batch(self.step)
                 t0 = time.perf_counter()
-                with self.mesh:
+                # The context is active while jit traces (first call) — that
+                # is when ops.gemm resolves its backend and block shapes.
+                with self.mesh, self._execution():
                     self.params, self.opt_state, metrics = self.train_step(
                         self.params, self.opt_state, batch
                     )

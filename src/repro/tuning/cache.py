@@ -215,18 +215,26 @@ def active_cache() -> Optional[TuningCache]:
 
 
 def cached_block_config(
-    m: int, k: int, n: int, dtype_name: str, dtype_bytes: int
+    m: int,
+    k: int,
+    n: int,
+    dtype_name: str,
+    dtype_bytes: int,
+    *,
+    spec_name: Optional[str] = None,
 ) -> Optional[BlockConfig]:
     """Kernel-side lookup: tuned config or None (caller derives analytically).
 
-    The spec the cache was tuned for is named by ``$REPRO_TUNING_SPEC``
-    (default ``tpu-v5e``).
+    ``spec_name`` selects the per-class entry (control trees pass their
+    class's core spec); when omitted, the spec the cache was tuned for is
+    named by ``$REPRO_TUNING_SPEC`` (default ``tpu-v5e``).
     """
 
     cache = active_cache()
     if cache is None:
         return None
-    spec_name = os.environ.get(ENV_SPEC_VAR, TPU_V5E.name)
+    if spec_name is None:
+        spec_name = os.environ.get(ENV_SPEC_VAR, TPU_V5E.name)
     cfg = cache.get(spec_name, dtype_name, m, k, n)
     if cfg is not None and cfg.dtype_bytes != dtype_bytes:
         cfg = dataclasses.replace(cfg, dtype_bytes=dtype_bytes)

@@ -51,6 +51,43 @@ class Calibration:
         return max(self.ratios) / min(self.ratios)
 
 
+@dataclasses.dataclass(frozen=True)
+class ClassMeasurement:
+    """One class's measured work: ``units`` completed in ``seconds``.
+
+    The wallclock feed for :func:`calibrate_class_ratios`: on a real fleet
+    these are per-pod step times (rows or tokens per step); on one host,
+    ``benchmarks.bench_schedulers.measure_class_step_times`` produces them
+    by timing the probe GEMM under each class's execution context.
+    """
+
+    name: str
+    units: float
+    seconds: float
+
+    @property
+    def rate(self) -> float:
+        return self.units / self.seconds
+
+
+def _ratios_from_measurements(
+    classes: Sequence, measurements: Sequence[ClassMeasurement]
+) -> tuple[list[float], list[float]]:
+    """Per-chip ratios (and raw seconds) from measured per-pod step times."""
+
+    by_name = {m.name: m for m in measurements}
+    missing = [c.name for c in classes if c.name not in by_name]
+    if missing:
+        raise ValueError(f"measurements missing classes {missing}")
+    # rel_throughput is per *chip*: divide the pod rate by its chip count
+    # so a big pod does not look fast merely by being wide.
+    rates = [
+        by_name[c.name].rate / max(1, getattr(c, "chips_per_pod", 1)) for c in classes
+    ]
+    top = max(rates)
+    return [r / top for r in rates], [by_name[c.name].seconds for c in classes]
+
+
 def calibrate_class_ratios(
     classes: Sequence,
     *,
@@ -58,6 +95,7 @@ def calibrate_class_ratios(
     backend: str = "cost-model",
     dtype_bytes: int = 2,
     configs: Optional[Sequence[BlockConfig]] = None,
+    measurements: Optional[Sequence[ClassMeasurement]] = None,
 ) -> Calibration:
     """Measure per-class throughput ratios on a probe GEMM.
 
@@ -66,20 +104,37 @@ def calibrate_class_ratios(
     *own* block config — pass ``configs`` to use tuned entries, otherwise
     each class gets its analytical derivation (the "two control trees" of
     Section 5.3 applied to calibration itself).
+
+    ``measurements`` short-circuits the probe entirely: pass per-class
+    :class:`ClassMeasurement` records (real per-pod step times, or the
+    host-local stand-ins from ``benchmarks.bench_schedulers``) and the
+    ratios come straight from them — the only way ``backend="wallclock"``
+    can calibrate *heterogeneous* core specs, since one host cannot time
+    two different chips.
     """
 
     m, k, n = probe_shape
+    if measurements is not None:
+        ratios, secs = _ratios_from_measurements(classes, measurements)
+        return Calibration(
+            class_names=tuple(c.name for c in classes),
+            ratios=tuple(ratios),
+            probe_shape=probe_shape,
+            backend=backend,
+            times_s=tuple(secs),
+        )
     if backend == "wallclock" and len({c.spec.name for c in classes}) > 1:
         # Wall-clock timing runs every probe on *this* host: it can only
         # distinguish block-config effects, not the classes' different
         # hardware, so heterogeneous specs would calibrate to ~1:1 and
-        # overload the slow class.  Measure each class on its own pod
-        # (feed the times to repro.core.asymmetric.calibrate_ratios) or
-        # use the cost model.
+        # overload the slow class.  Measure each class on its own pod and
+        # feed the times back via ``measurements=`` (ClassMeasurement
+        # records, e.g. from benchmarks.bench_schedulers), or use the
+        # cost model.
         raise ValueError(
             "wallclock calibration cannot compare heterogeneous core specs "
-            "on one host; use backend='cost-model' or per-pod measured "
-            "step times via repro.core.asymmetric.calibrate_ratios"
+            "on one host; use backend='cost-model' or pass per-pod measured "
+            "step times via measurements=[ClassMeasurement(...), ...]"
         )
     times = []
     for i, cls in enumerate(classes):
@@ -126,4 +181,9 @@ def sweep_ratio_knob(
     return float(best[0]), results
 
 
-__all__ = ["Calibration", "calibrate_class_ratios", "sweep_ratio_knob"]
+__all__ = [
+    "Calibration",
+    "ClassMeasurement",
+    "calibrate_class_ratios",
+    "sweep_ratio_knob",
+]

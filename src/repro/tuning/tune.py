@@ -16,7 +16,11 @@ Workflow (the paper's Section 3.3 search, driven to a cache file)::
     REPRO_TUNING_CACHE=artifacts/tuning.json python train.py ...
 
 ``--backend wallclock`` times the real Pallas kernel instead (compiled on
-TPU, interpret on CPU — slow, hardware-representative).  ``--dry-run``
+TPU, interpret on CPU — slow, hardware-representative).  Wallclock search
+runs the paper's two-stage protocol by default (``--two-stage auto``): the
+roofline cost model prunes the grid to ``--coarse-keep`` promising
+candidates, only those are wallclock-timed, and the timed winner's
+neighborhood is refined (Figure 4's coarse sweep -> refine).  ``--dry-run``
 searches a tiny default shape set and writes nothing (the CI smoke step).
 ``--calibrate-ratios`` additionally runs the Section 5.2.2 per-class
 calibration over the big.LITTLE device classes and records the resulting
@@ -52,8 +56,9 @@ class SearchResult:
     best_time_s: float
     analytical: BlockConfig
     analytical_time_s: float
-    n_candidates: int
+    n_candidates: int          # candidates actually scored by `backend`
     cache_hit: bool = False
+    n_pruned: int = 0          # candidates dropped by the cost-model prefilter
 
     @property
     def speedup(self) -> float:
@@ -69,30 +74,67 @@ def search_shape(
     dtype_bytes: int,
     backend,
     max_candidates: Optional[int] = None,
+    prefilter=None,
+    coarse_keep: int = 8,
 ) -> SearchResult:
-    """Score every candidate; the analytical config is always candidate #0,
-    so the winner's time is <= the analytical default's by construction."""
+    """Score candidates; the analytical config is always candidate #0,
+    so the winner's time is <= the analytical default's by construction.
+
+    ``prefilter`` enables the paper's two-stage Figure-4 sweep: a cheap
+    ``(m, k, n, cfg) -> seconds`` scorer (the roofline cost model) ranks
+    the full grid first, only the ``coarse_keep`` most promising
+    candidates (plus the analytical seed) are timed with ``backend``, and
+    the timed winner's one-step neighborhood is then refined with
+    ``backend`` as well.  This is what makes wallclock search affordable:
+    the expensive timer runs on tens of candidates, not hundreds.
+    """
 
     cands = CAND.enumerate_candidates(m, k, n, spec=spec, dtype_bytes=dtype_bytes)
     if max_candidates is not None and len(cands) > max_candidates:
         # Keep the analytical seed, truncate the tail of the coarse grid.
         cands = cands[:max_candidates]
     analytical = cands[0]
+
+    n_pruned = 0
+    if prefilter is not None and len(cands) > coarse_keep + 1:
+        # Coarse stage: rank by the cheap model, keep the best region.
+        ranked = sorted(cands[1:], key=lambda c: prefilter(m, k, n, c))
+        kept = [analytical] + ranked[:coarse_keep]
+        n_pruned = len(cands) - len(kept)
+        cands = kept
+
     best, best_t, ana_t = None, float("inf"), None
+    timed: set[tuple[int, int, int]] = set()
     for cfg in cands:
         t = backend(m, k, n, cfg)
+        timed.add((cfg.bm, cfg.bk, cfg.bn))
         if cfg == analytical:
             ana_t = t
         if t < best_t:
             best, best_t = cfg, t
     assert best is not None and ana_t is not None
+
+    if prefilter is not None and n_pruned:
+        # Fine stage: refine around the coarse winner (paper Figure 4).
+        # Skipped when the coarse stage pruned nothing — the candidate
+        # grid was already timed exhaustively.
+        for cfg in CAND.neighborhood(best, spec=spec):
+            key = (cfg.bm, cfg.bk, cfg.bn)
+            if key in timed:
+                continue
+            t = backend(m, k, n, cfg)
+            timed.add(key)
+            if t < best_t:
+                best, best_t = cfg, t
+
     return SearchResult(
         shape=(m, k, n),
         best=best,
         best_time_s=best_t,
         analytical=analytical,
         analytical_time_s=ana_t,
-        n_candidates=len(cands),
+        n_candidates=len(timed),
+        n_pruned=n_pruned,
     )
 
 
@@ -122,11 +164,25 @@ def tune_shapes(
     cache: Optional[C.TuningCache] = None,
     force: bool = False,
     max_candidates: Optional[int] = None,
+    two_stage: Optional[bool] = None,
+    coarse_keep: int = 8,
 ) -> list[SearchResult]:
-    """Library entry point: search ``shapes``, updating ``cache`` in place."""
+    """Library entry point: search ``shapes``, updating ``cache`` in place.
+
+    ``two_stage=None`` (auto) enables the cost-model prefilter exactly when
+    the scoring backend is wallclock — the cost model pruning itself would
+    be circular.  Pass True/False to force either way.
+    """
 
     dtype_name, dtype_bytes = DTYPES[dtype]
     backend = M.make_backend(backend_name, spec=spec)
+    if two_stage is None:
+        two_stage = backend_name == "wallclock"
+    prefilter = (
+        (lambda m, k, n, cfg: M.cost_model_time(m, k, n, cfg, spec=spec))
+        if two_stage
+        else None
+    )
     results = []
     for m, k, n in shapes:
         cached = cache.get(spec.name, dtype_name, m, k, n) if cache else None
@@ -162,14 +218,16 @@ def tune_shapes(
             dtype_bytes=dtype_bytes,
             backend=backend,
             max_candidates=max_candidates,
+            prefilter=prefilter,
+            coarse_keep=coarse_keep,
         )
         log.info(
             "tuned %dx%dx%d: best=(%d,%d,%d) %.3es vs analytical=(%d,%d,%d) "
-            "%.3es (%.2fx, %d candidates, %.1fs search)",
+            "%.3es (%.2fx, %d timed, %d pruned, %.1fs search)",
             m, k, n,
             res.best.bm, res.best.bk, res.best.bn, res.best_time_s,
             res.analytical.bm, res.analytical.bk, res.analytical.bn,
-            res.analytical_time_s, res.speedup, res.n_candidates,
+            res.analytical_time_s, res.speedup, res.n_candidates, res.n_pruned,
             time.perf_counter() - t0,
         )
         if cache is not None:
@@ -195,6 +253,10 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     ap.add_argument("--cache", default=None, help="cache file (default: $REPRO_TUNING_CACHE or artifacts/tuning/cache.json)")
     ap.add_argument("--force", action="store_true", help="re-search cached shapes")
     ap.add_argument("--max-candidates", type=int, default=None)
+    ap.add_argument("--two-stage", default="auto", choices=["auto", "on", "off"],
+                    help="cost-model prefilter before timing (auto: on for wallclock)")
+    ap.add_argument("--coarse-keep", type=int, default=8,
+                    help="candidates surviving the coarse prefilter stage")
     ap.add_argument("--calibrate-ratios", action="store_true",
                     help="also calibrate big.LITTLE class ratios (Section 5.2.2)")
     ap.add_argument("--dry-run", action="store_true",
@@ -223,6 +285,8 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         cache=cache,
         force=args.force,
         max_candidates=args.max_candidates,
+        two_stage={"auto": None, "on": True, "off": False}[args.two_stage],
+        coarse_keep=args.coarse_keep,
     )
 
     summary: dict = {
