@@ -11,6 +11,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import argparse
 import shutil
 
+import jax
+
 from repro.configs import get_config
 from repro.core.asymmetric import AsymmetricMesh, DeviceClass
 from repro.launch.mesh import make_host_mesh
@@ -51,9 +53,15 @@ def main():
         sizes = asym.batch_layout(16).sizes
         return [sizes[0] / 1.0 + 1e-9, sizes[1] / 0.35 + 1e-9]
 
+    # With a host device per pod the step runs class-sharded: one SPMD
+    # program in which the big pod's shard executes under big's control
+    # tree and the little pod's under little's (the paper's two control
+    # trees, §5.3 — not an approximation with a single primary tree).
+    mesh = make_host_mesh(pod=asym.n_pods) if jax.device_count() >= asym.n_pods \
+        else make_host_mesh()
     trainer = Trainer(
         cfg,
-        make_host_mesh(),
+        mesh,
         tcfg=TrainerConfig(steps=args.steps, global_batch=16, seq_len=64,
                            ckpt_dir=ckpt, ckpt_every=10),
         opt_cfg=AdamWConfig(lr=1e-3, total_steps=args.steps, warmup_steps=5),
@@ -61,8 +69,13 @@ def main():
         failure_hook=failure,
         pod_time_hook=pod_times,
     )
-    print(f"training under device class {trainer.exec_ctx.device_class!r} "
-          f"(backend={trainer.exec_ctx.backend()})")
+    if trainer.class_sharded_step is not None:
+        shards = ", ".join(f"pod{p.pod}->{p.device_class}[{p.block_source}]"
+                           for p in trainer.class_sharded_step.provenance)
+        print(f"class-sharded step: {shards}")
+    else:
+        print(f"training under device class {trainer.exec_ctx.device_class!r} "
+              f"(backend={trainer.exec_ctx.backend()})")
     hist = trainer.run()
     print(f"arch={cfg.name} steps={len(hist)} restarts={trainer.restarts}")
     print(f"loss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")

@@ -193,6 +193,18 @@ class AsymmetricMesh:
 
         return max(self.classes, key=lambda c: c.rel_throughput)
 
+    # -- per-shard class lookup (the pod→class mapping) -------------------
+
+    def pod_class_indices(self) -> list[int]:
+        """Class index (into ``self.classes``) per pod — pod→class map."""
+
+        return [ci for ci, _ in self._pod_class]
+
+    def class_of_pod(self, pod: int) -> DeviceClass:
+        """The device class that owns pod ``pod``."""
+
+        return self._pod_class[pod][1]
+
     def control_trees(self, shape: Optional[tuple[int, int, int]] = None) -> dict:
         """Per-class control trees for ``shape`` (default: ``tree_shape``).
 
@@ -248,6 +260,80 @@ class AsymmetricMesh:
                 f"unknown device class {class_name!r}; have {sorted(trees)}"
             )
         return ExecutionContext(device_class=class_name, tree=trees[class_name])
+
+    def class_contexts(self, *, shape: Optional[tuple[int, int, int]] = None):
+        """One :class:`ExecutionContext` per class, in ``classes`` order
+        (the order ``pod_class_indices`` indexes into)."""
+
+        from repro.core.execution import ExecutionContext
+
+        trees = self.control_trees(shape)
+        return [
+            ExecutionContext(device_class=c.name, tree=trees[c.name])
+            for c in self.classes
+        ]
+
+    def class_sharded(
+        self,
+        fn,
+        *,
+        mesh,
+        in_specs,
+        out_specs,
+        axis: str = "pod",
+        shape: Optional[tuple[int, int, int]] = None,
+        epilogue=None,
+    ):
+        """Wrap ``fn`` so each pod shard runs under its own class's tree.
+
+        The SPMD realization of the paper's CA-SAS (§5.3): one
+        ``shard_map`` step in which every pod executes the program traced
+        under *its* class's execution context — big pods under big's tuned
+        control tree, LITTLE pods under little's — instead of the whole
+        step running under a single primary-class context.
+
+        ``mesh`` is the ``jax.sharding.Mesh`` whose ``axis`` indexes the
+        pods (``mesh.shape[axis]`` must equal ``n_pods``).  Falls back to
+        the single-context wrapper (bit-identical to
+        ``execution_context()`` activation, no shard_map) when the mesh
+        has one class, when the mesh lacks the pod axis, or when the axis
+        size is 1.  See :func:`repro.core.execution.class_sharded`.
+        """
+
+        from repro.core import execution as X
+        from repro.distributed.sharding import pod_class_specs
+
+        contexts = self.class_contexts(shape=shape)
+        single = (
+            len(contexts) == 1
+            or axis not in getattr(mesh, "axis_names", ())
+            or mesh.shape[axis] == 1
+        )
+        if single:
+            primary = self._primary_class().name
+            ctx = next(c for c in contexts if c.device_class == primary)
+            return X.class_sharded(
+                fn,
+                mesh=mesh,
+                contexts=[ctx],
+                pod_class=[0] * self.n_pods,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                axis=axis,
+                epilogue=epilogue,
+            )
+        pod_class, pod_spec = pod_class_specs(self, axis=axis)
+        return X.class_sharded(
+            fn,
+            mesh=mesh,
+            contexts=contexts,
+            pod_class=pod_class,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            axis=axis,
+            epilogue=epilogue,
+            pod_class_spec=pod_spec,
+        )
 
     # -- scheduling -------------------------------------------------------
 

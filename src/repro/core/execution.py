@@ -19,6 +19,11 @@ This module is the jax_pallas realization of that routing:
   * :func:`resolve_block_config` — the single tuned-or-analytical
     resolution path: the ``$REPRO_TUNING_CACHE`` entry for the class's
     core spec wins, the Section-3.3 analytical derivation is the fallback.
+  * :func:`class_sharded` — per-class programs within one SPMD step: a
+    ``shard_map`` over the pod axis in which each pod shard runs the
+    program traced under *its* class's context (true CA-SAS, paper
+    §5.3–5.4; DESIGN.md §2), with :class:`ShardProvenance` recording
+    which tree governs which shard.
 
 With **no context active** every call behaves exactly as before this layer
 existed: ``backend="auto"`` probes the JAX backend (Pallas on TPU, XLA
@@ -38,7 +43,7 @@ from __future__ import annotations
 
 import contextvars
 import dataclasses
-from typing import TYPE_CHECKING, Callable, Literal, Optional
+from typing import TYPE_CHECKING, Callable, Literal, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -299,6 +304,209 @@ def current_context() -> Optional[ExecutionContext]:
     return _ACTIVE.get()
 
 
+# ---------------------------------------------------------------------------
+# Per-class programs within one SPMD step (shard_map over the pod axis)
+# ---------------------------------------------------------------------------
+
+
+def compat_shard_map(f, *, mesh, in_specs, out_specs, auto=frozenset()):
+    """``shard_map`` with replication checking off, across jax versions.
+
+    The replication-check kwarg was renamed (``check_rep`` →
+    ``check_vma``); class-sharded bodies carry per-shard control flow the
+    checker cannot see through, so it is always disabled here.
+    """
+
+    from jax.experimental.shard_map import shard_map
+
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if auto:
+        kwargs["auto"] = frozenset(auto)
+    try:
+        return shard_map(f, check_rep=False, **kwargs)
+    except TypeError:  # newer jax renamed the kwarg
+        return shard_map(f, check_vma=False, **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardProvenance:
+    """Which class's control tree governs one pod shard (paper §5.3)."""
+
+    pod: int
+    device_class: str
+    spec: str
+    backend: str
+    block_source: str  # "tuned" | "analytical" — the tree's provenance
+    block: BlockConfig
+
+
+@dataclasses.dataclass(eq=False)  # identity hash/eq: jit-able as a callable
+class ClassShardedFn:
+    """A callable wrapping ``fn`` so each pod shard runs its own class's
+    program, plus the per-shard provenance (for assertions / telemetry).
+
+    ``trace_log`` records, at trace time, which contexts actually traced a
+    branch — the proof that each class's tree was ambient while its
+    program was built (appended once per trace; jit retraces append again).
+    """
+
+    fn: Callable
+    provenance: tuple[ShardProvenance, ...]
+    trace_log: list
+    mixed: bool  # False on the single-class fallback (no shard_map)
+
+    def __call__(self, *args):
+        return self.fn(*args)
+
+
+def class_sharded(
+    fn: Callable,
+    *,
+    mesh,
+    contexts: Sequence[ExecutionContext],
+    pod_class: Sequence[int],
+    in_specs,
+    out_specs,
+    axis: str = "pod",
+    epilogue: Optional[Callable] = None,
+    auto: Optional[frozenset] = None,
+    pod_class_spec=None,
+) -> ClassShardedFn:
+    """True CA-SAS within one SPMD step: per-class programs under shard_map.
+
+    The paper's §5.3/§5.4 schemes run *different* control trees on the big
+    and LITTLE clusters simultaneously inside one gemm.  Here, a
+    ``shard_map`` over the mesh's ``axis`` (the pod axis) gives every pod
+    its shard of the work, and each shard *selects the program traced
+    under its own class's execution context*: ``fn`` is traced once per
+    class, each trace under that class's :class:`ExecutionContext` (so
+    every ``ops.gemm`` in branch *c* resolves class *c*'s tuned block
+    config and backend), and a ``lax.switch`` on the shard's class index
+    picks the branch at run time.  Pods of the same class take the same
+    branch, so intra-class (auto-axis) collectives stay consistent.
+
+    ``contexts`` is ordered by class index; ``pod_class[i]`` is the class
+    index of pod ``i`` and ``pod_class_spec`` shards it one-per-pod —
+    ``repro.distributed.sharding.pod_class_specs`` produces the pair
+    (``AsymmetricMesh.class_sharded`` feeds it through; the spec defaults
+    to ``P(axis)``).  The class index reaches each shard as a pod-sharded
+    *input*, not ``axis_index`` — keeping the body free of partition-id
+    lowering so partial-auto meshes work on every backend.
+
+    ``epilogue(out, shard_args, axis)`` runs inside the shard_map body
+    *after* the switch — the one place cross-pod collectives are legal
+    (all pods execute it, branch-independent).  Use it for the weighted
+    gradient psum of a train step.  With a single class the fallback
+    wrapper simply activates the one context around ``fn`` — no
+    shard_map, bit-identical to the pre-class-sharded path — and calls
+    ``epilogue`` with ``axis=None``.
+
+    ``fn`` must itself contain no cross-``axis`` collectives (they would
+    run under a data-dependent branch and deadlock across classes).
+
+    The shard_map is **fully manual** by default: devices sharing a pod
+    coordinate replicate that pod's program (exact, and free when the
+    non-pod axes have extent 1 — the host realization).  Passing the
+    non-pod axes via ``auto`` would let GSPMD keep partitioning the
+    fine-grain Loop-4 math across them, but current XLA's partitioner
+    CHECK-fails on ``lax.scan`` inside a ``switch`` branch under a manual
+    subgroup (verified on 0.4.x), and every model in the zoo scans over
+    layers — so ``auto`` is opt-in until the partitioner supports it.
+    """
+
+    contexts = list(contexts)
+    if not contexts:
+        raise ValueError("need at least one execution context")
+    pod_class = tuple(int(c) for c in pod_class)
+    if any(c < 0 or c >= len(contexts) for c in pod_class):
+        raise ValueError(
+            f"pod_class {pod_class} out of range for {len(contexts)} classes"
+        )
+    provenance = tuple(
+        ShardProvenance(
+            pod=i,
+            device_class=contexts[c].device_class,
+            spec=contexts[c].spec.name,
+            backend=contexts[c].backend(),
+            block_source=contexts[c].tree.block_source,
+            block=contexts[c].tree.block,
+        )
+        for i, c in enumerate(pod_class)
+    )
+    trace_log: list = []
+
+    if len(contexts) == 1:
+        # Single-class fallback: the one context governs the whole program
+        # — exactly the pre-class-sharded execution path, no shard_map.
+        ctx = contexts[0]
+
+        def single(*args):
+            with ctx:
+                trace_log.append((ctx.device_class, ctx.tree.block_source))
+                out = fn(*args)
+            if epilogue is not None:
+                out = epilogue(out, args, None)
+            return out
+
+        return ClassShardedFn(
+            fn=single, provenance=provenance, trace_log=trace_log, mixed=False
+        )
+
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has no {axis!r} axis; axes={mesh.axis_names}")
+    if mesh.shape[axis] != len(pod_class):
+        raise ValueError(
+            f"pod_class covers {len(pod_class)} pods but mesh axis "
+            f"{axis!r} has size {mesh.shape[axis]}"
+        )
+    if auto is None:
+        auto = frozenset()
+    manual = frozenset(mesh.axis_names) - frozenset(auto)
+
+    def _branch(ctx: ExecutionContext):
+        def branch(ops):
+            with ctx:
+                # Trace-time record: this class's tree was ambient while
+                # its per-class program was built.
+                trace_log.append((ctx.device_class, ctx.tree.block_source))
+                return fn(*ops)
+
+        return branch
+
+    branches = [_branch(ctx) for ctx in contexts]
+
+    def body(cls, *shard_args):
+        from repro.distributed.sharding import activation_manual_axes
+
+        # Manual axes are fixed inside this body: activation constraints
+        # traced here must not mention them.
+        with activation_manual_axes(manual):
+            out = jax.lax.switch(cls[0], branches, shard_args)
+            if epilogue is not None:
+                out = epilogue(out, shard_args, axis)
+        return out
+
+    from jax.sharding import PartitionSpec as P
+
+    if pod_class_spec is None:
+        pod_class_spec = P(axis)
+    smap = compat_shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(pod_class_spec,) + tuple(in_specs),
+        out_specs=out_specs,
+        auto=auto,
+    )
+    idx = jnp.asarray(pod_class, jnp.int32)
+
+    def wrapped(*args):
+        return smap(idx, *args)
+
+    return ClassShardedFn(
+        fn=wrapped, provenance=provenance, trace_log=trace_log, mixed=True
+    )
+
+
 def context_for_tree(tree: "ControlTree") -> ExecutionContext:
     """Wrap an existing control tree (e.g. one of ``build_control_trees``)."""
 
@@ -333,7 +541,11 @@ __all__ = [
     "Backend",
     "BACKENDS",
     "BACKEND_NAMES",
+    "ClassShardedFn",
     "ExecutionContext",
+    "ShardProvenance",
+    "class_sharded",
+    "compat_shard_map",
     "context_for_tree",
     "current_context",
     "default_context",

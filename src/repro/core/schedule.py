@@ -117,7 +117,7 @@ def sas_partition(
     sizes = _largest_remainder(ratios * w, n_units)
 
     if tiles is not None:
-        sizes = _align_sizes(sizes, np.asarray(tiles, dtype=np.int64), n_units, ratios * w)
+        sizes = _align_sizes(sizes, np.asarray(tiles, dtype=np.int64), n_units)
     return _table_from_sizes(n_units, sizes)
 
 
@@ -133,31 +133,32 @@ def ca_sas_partition(
     return sas_partition(n_units, ratios, workers=workers, tiles=tiles)
 
 
-def _align_sizes(
-    sizes: np.ndarray, tiles: np.ndarray, n_units: int, weights: np.ndarray
-) -> np.ndarray:
+def _align_sizes(sizes: np.ndarray, tiles: np.ndarray, n_units: int) -> np.ndarray:
     """Round class sizes to their tiles while preserving the exact total.
 
-    The class with the smallest tile absorbs the residue (in the paper the
-    LITTLE cluster's small ``m_c`` mops up the remainder rows).  If any
-    class's tile exceeds its proportional share the alignment would starve
-    it — fall back to the unaligned split (the paper's partial-panel case:
-    a cluster may process a sub-``m_c`` panel at reduced efficiency rather
-    than no panel at all).
+    A class whose tile exceeds its proportional share cannot align without
+    starving — *that class alone* keeps its unaligned share (the paper's
+    partial-panel case: a cluster processes a sub-``m_c`` panel at reduced
+    efficiency rather than no panel at all); every other class keeps its
+    ``m_c`` alignment.  The residue from rounding the aligned classes down
+    goes to a class that is already unaligned when one exists, else to the
+    class with the smallest tile (the paper's LITTLE cluster mopping up
+    remainder rows).  Since ``aligned[i] <= sizes[i]`` for every class the
+    residue is provably non-negative.
     """
 
     sizes = sizes.copy()
-    if np.any((tiles > np.maximum(sizes, 1)) & (sizes > 0)):
-        return sizes
-    aligned = (sizes // tiles) * tiles
+    starved = (tiles > np.maximum(sizes, 1)) & (sizes > 0)
+    aligned = np.where(starved, sizes, (sizes // tiles) * tiles)
     residue = int(n_units - aligned.sum())
-    sink = int(np.argmin(tiles))
+    if starved.any():
+        # Already-partial classes absorb the remainder; pick the one with
+        # the smallest tile (closest analogue of the paper's sink).
+        candidates = np.where(starved)[0]
+        sink = int(candidates[np.argmin(tiles[candidates])])
+    else:
+        sink = int(np.argmin(tiles))
     aligned[sink] += residue
-    if aligned[sink] < 0:  # degenerate tiny problems: fall back to largest class
-        aligned[sink] = 0
-        deficit = int(n_units - aligned.sum())
-        top = int(np.argmax(weights))
-        aligned[top] += deficit
     return aligned
 
 
@@ -208,16 +209,23 @@ def das_schedule(
     then spread across the class's cores (folded into ``rates[cls]``, the
     aggregate class throughput in units/second).  ``grab_overhead`` models
     the critical section.  Deterministic: ties broken by class index.
+
+    A zero-rate class (a dead pod) never grabs work — it is skipped by the
+    greedy loop, exactly as a hung cluster leader would never re-enter the
+    paper's critical section.  All classes dead is unschedulable and raises.
     """
 
     rates = list(map(float, rates))
     strides = [max(1, int(s)) for s in strides]
+    alive = [i for i, r in enumerate(rates) if r > 0.0]
+    if not alive and n_units > 0:
+        raise ValueError("all class rates are zero — nothing can grab work")
     t = [0.0] * len(rates)  # next-free time per class
     busy = [0.0] * len(rates)
     pos = 0
     assignments: list[Chunk] = []
     while pos < n_units:
-        cls = min(range(len(rates)), key=lambda i: (t[i], i))
+        cls = min(alive, key=lambda i: (t[i], i))
         size = min(strides[cls], n_units - pos)
         dur = grab_overhead + size * unit_cost / rates[cls]
         assignments.append(Chunk(cls=cls, start=pos, size=size))
@@ -287,10 +295,19 @@ class DynamicScheduler:
 
 
 def balanced_ratio(rates: Sequence[float]) -> float:
-    """The paper's optimal ratio knob: fast rate / slow rate (Section 5.2.2)."""
+    """The paper's optimal ratio knob: fast rate / slow rate (Section 5.2.2).
+
+    Defined for any number of classes in any order — the knob is the spread
+    between the fastest and slowest class (1.0 when homogeneous or with a
+    single class).  Non-positive rates have no meaningful ratio and raise.
+    """
 
     rates = list(map(float, rates))
-    return rates[0] / rates[1]
+    if not rates:
+        raise ValueError("need at least one class rate")
+    if min(rates) <= 0.0:
+        raise ValueError(f"class rates must be positive, got {rates}")
+    return max(rates) / min(rates)
 
 
 __all__ = [

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+
+from repro.core.execution import compat_shard_map
 
 
 def quantize_int8(x: jnp.ndarray):
@@ -66,12 +67,13 @@ def compressed_crosspod_mean(grads, err_tree, mesh: Mesh, *, axis: str = "pod"):
 
     def one(g, e):
         gspec = P(*([None] * g.ndim))
-        fn = shard_map(
+        # compat_shard_map handles the check_rep→check_vma kwarg rename
+        # (the bare check_vma call was a TypeError on jax 0.4.x).
+        fn = compat_shard_map(
             functools.partial(_crosspod_mean_one, axis=axis),
             mesh=mesh,
             in_specs=(gspec, gspec),
             out_specs=(gspec, gspec),
-            check_vma=False,
         )
         return fn(g, e)
 

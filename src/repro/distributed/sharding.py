@@ -20,9 +20,11 @@ whether it is ``(L, D, F)`` dense or ``(L, E, D, F)`` MoE.
 
 from __future__ import annotations
 
-from typing import Optional
+import contextlib
+from typing import Optional, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -185,6 +187,46 @@ def replicated(mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# Pod→class mapping as shard_map specs (the class-sharded step's inputs)
+# ---------------------------------------------------------------------------
+#
+# ``execution.class_sharded`` runs one program per device class inside a
+# single SPMD step (shard_map over the pod axis).  These helpers express
+# the pieces it needs as data + PartitionSpecs: the per-pod class index
+# (sharded over the pod axis so each shard reads its own class), and the
+# batch/state/replicated specs for the wrapped step function.
+
+
+def pod_class_indices(asym) -> np.ndarray:
+    """``(n_pods,)`` int32 class index per pod — the pod→class mapping."""
+
+    return np.asarray(asym.pod_class_indices(), np.int32)
+
+
+def pod_class_specs(asym, *, axis: str = "pod") -> tuple[np.ndarray, P]:
+    """The pod→class mapping plus the spec that shards it one-per-pod."""
+
+    return pod_class_indices(asym), P(axis)
+
+
+def pod_batch_specs(batch_tree, *, axis: str = "pod"):
+    """Batch tensors shard their leading (row) dim over the pod axis."""
+
+    return jax.tree.map(lambda _: P(axis), batch_tree)
+
+
+def pod_state_specs(state_tree, *, axis: str = "pod", dim: int = 1):
+    """Decode caches / SSM states shard their batch dim (default dim 1)."""
+
+    def f(leaf):
+        spec = [None] * leaf.ndim
+        spec[dim] = axis
+        return P(*spec)
+
+    return jax.tree.map(f, state_tree)
+
+
+# ---------------------------------------------------------------------------
 # Activation constraints
 # ---------------------------------------------------------------------------
 #
@@ -199,6 +241,40 @@ def replicated(mesh: Mesh):
 
 _ACT_MESH: Optional[Mesh] = None
 _ACT_SEQ: bool = False
+# Axes that are *manual* in the surrounding shard_map body (trace-time
+# state): activation constraints must not mention them — their extent is
+# already fixed by the manual sharding, and GSPMD rejects constraints over
+# manual axes.  Set by execution.class_sharded while tracing its body.
+_ACT_MANUAL: frozenset = frozenset()
+
+
+@contextlib.contextmanager
+def activation_manual_axes(axes: Sequence[str]):
+    """Trace-time guard: drop these mesh axes from activation constraints.
+
+    Used while tracing inside a shard_map body where ``axes`` are manual
+    (the class-sharded pod axis); nests and restores on exit.
+    """
+
+    global _ACT_MANUAL
+    prev = _ACT_MANUAL
+    _ACT_MANUAL = prev | frozenset(axes)
+    try:
+        yield
+    finally:
+        _ACT_MANUAL = prev
+
+
+def _drop_manual(axes):
+    """Filter manual axes out of one spec entry (name | tuple | None)."""
+
+    if axes is None or not _ACT_MANUAL:
+        return axes
+    ax = axes if isinstance(axes, tuple) else (axes,)
+    kept = tuple(a for a in ax if a not in _ACT_MANUAL)
+    if not kept:
+        return None
+    return kept if isinstance(axes, tuple) else kept[0]
 
 
 def use_mesh_for_activations(mesh: Optional[Mesh], *, seq_shard: bool = False):
@@ -230,6 +306,7 @@ def constrain(x, spec_axes: tuple):
         return x
     out = []
     for dim, axes in zip(x.shape, spec_axes):
+        axes = _drop_manual(axes)
         if axes is None:
             out.append(None)
             continue
@@ -280,7 +357,7 @@ def constrain_batch(x, *, extra: Optional[tuple] = None, allow_seq: bool = True)
     mesh = _ACT_MESH
     if mesh is None:
         return x
-    axes = dp_axes(mesh)
+    axes = _drop_manual(dp_axes(mesh))
     if axes is None:
         return x
     size = 1

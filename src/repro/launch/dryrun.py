@@ -52,9 +52,24 @@ def _bf16_specs(tree):
     return jax.tree.map(f, tree)
 
 
+def _mixed_active(asym, mesh) -> bool:
+    return (
+        asym is not None
+        and len(asym.classes) > 1
+        and "pod" in mesh.axis_names
+        and mesh.shape["pod"] == asym.n_pods
+    )
+
+
 def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
-               seq_shard=True):
-    """Returns (fn, example_args_specs, in_shardings, out_shardings)."""
+               seq_shard=True, asym=None):
+    """Returns (fn, example_args_specs, in_shardings, out_shardings).
+
+    With a multi-class ``asym`` (``--little-spec``) and a pod-axis mesh,
+    the cell fn is wrapped through ``class_sharded``: each pod's shard of
+    the step lowers under its own class's control tree — the mixed-step
+    program the fleet would actually run.
+    """
 
     cfg = get_config(arch_name)
     SH.use_mesh_for_activations(mesh, seq_shard=seq_shard)
@@ -62,6 +77,7 @@ def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
     params_spec = jax.eval_shape(lambda: Z.init_params(jax.random.PRNGKey(0), cfg))
     batch = Z.batch_spec(cfg, shape)
     batch_sh = SH.batch_sharding(mesh, batch)
+    mixed = _mixed_active(asym, mesh)
 
     if shape.kind == "train":
         p_sh = SH.shard_params(params_spec, mesh, fsdp=fsdp)
@@ -70,10 +86,22 @@ def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
         opt_cfg = O.AdamWConfig()
         loss = Z.make_loss_fn(cfg, remat=remat)
 
-        def train_step(params, opt_state, b):
-            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, b)
-            params, opt_state, om = O.adamw_update(params, grads, opt_state, opt_cfg)
-            return params, opt_state, l
+        if mixed:
+            from repro.runtime.trainer import build_class_sharded_grad_step
+
+            grad_fn = build_class_sharded_grad_step(loss, asym, mesh)
+
+            def train_step(params, opt_state, b):
+                l, metrics, grads = grad_fn(params, b)
+                params, opt_state, om = O.adamw_update(params, grads, opt_state, opt_cfg)
+                return params, opt_state, l
+
+            train_step.provenance = grad_fn.provenance
+        else:
+            def train_step(params, opt_state, b):
+                (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params, b)
+                params, opt_state, om = O.adamw_update(params, grads, opt_state, opt_cfg)
+                return params, opt_state, l
 
         return (
             train_step,
@@ -88,6 +116,12 @@ def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
 
     if shape.kind == "prefill":
         fn = Z.make_prefill_fn(cfg)
+        if mixed:
+            fn = asym.class_sharded(
+                fn, mesh=mesh,
+                in_specs=(P(), SH.pod_batch_specs(batch)),
+                out_specs=P("pod"),
+            )
         logits_sh = SH.array_sharding(
             mesh,
             (shape.global_batch, shape.seq_len, cfg.vocab),
@@ -99,6 +133,13 @@ def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
     state_spec = Z.decode_state_spec(cfg, shape.global_batch, shape.seq_len)
     state_sh = SH.cache_sharding(mesh, state_spec)
     fn = Z.make_decode_fn(cfg)
+    if mixed:
+        sspecs = SH.pod_state_specs(state_spec)
+        fn = asym.class_sharded(
+            fn, mesh=mesh,
+            in_specs=(P(), P("pod"), sspecs, P()),
+            out_specs=(P("pod"), sspecs),
+        )
     pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
     logits_sh = SH.array_sharding(
         mesh,
@@ -115,13 +156,15 @@ def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
 
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
              force: bool = False, remat: bool = True, fsdp: bool = True,
-             seq_shard: bool = True, tag: str = "", spec_name: str = "tpu-v5e") -> dict:
+             seq_shard: bool = True, tag: str = "", spec_name: str = "tpu-v5e",
+             little_spec: str = "") -> dict:
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
     # Non-default specs get their own cell files — otherwise a --spec run
     # would silently return records lowered under a different context.
     cell_id = (
         f"{arch_name}__{shape_name}__{mesh_tag}"
         + (f"__{spec_name}" if spec_name != "tpu-v5e" else "")
+        + (f"__mixed-{little_spec}" if little_spec else "")
         + (f"__{tag}" if tag else "")
     )
     path = os.path.join(out_dir, cell_id + ".json")
@@ -148,15 +191,32 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
     try:
         from repro.tuning.candidates import get_spec
 
+        asym = None
+        if little_spec:
+            if not multi_pod:
+                raise ValueError("--little-spec needs --multi-pod (a pod axis)")
+            from repro.core.asymmetric import AsymmetricMesh, DeviceClass
+
+            asym = AsymmetricMesh(
+                [
+                    DeviceClass("big", spec=get_spec(spec_name)),
+                    DeviceClass("little", spec=get_spec(little_spec),
+                                rel_throughput=0.35),
+                ],
+            )
+
         t0 = time.time()
         # Lower under the target class's execution context: with a tuning
         # cache active the cell's matmuls pick up the per-spec tuned block
         # configs; without one this is behavior-neutral (analytical +
-        # auto backend, exactly the bare defaults).
+        # auto backend, exactly the bare defaults).  With --little-spec the
+        # cell fn itself is class-sharded (each pod under its own tree) and
+        # this outer context only covers math outside the shard_map.
         exec_ctx = X.default_context(spec=get_spec(spec_name))
         with exec_ctx:
             fn, args, in_sh, out_sh = build_cell(
-                arch_name, shape_name, mesh, remat=remat, fsdp=fsdp, seq_shard=seq_shard
+                arch_name, shape_name, mesh, remat=remat, fsdp=fsdp,
+                seq_shard=seq_shard, asym=asym,
             )
             # Donate the big mutable state: params+opt for train (step output
             # aliases input), the KV/SSM caches for decode.
@@ -172,12 +232,20 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
 
         ma = compiled.memory_analysis()
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # older jax: one dict per device
+            ca = ca[0] if ca else {}
         text = compiled.as_text()
         cost = hlo_analysis.analyze(text)
 
         rec.update(
             ok=True,
             device_class=exec_ctx.device_class,
+            class_sharded=bool(asym is not None),
+            shard_classes=(
+                [(p.pod, p.device_class, p.block_source)
+                 for p in getattr(fn, "provenance", [])]
+                if asym is not None else None
+            ),
             n_chips=n_chips,
             lower_s=round(t_lower, 2),
             compile_s=round(t_compile, 2),
@@ -224,6 +292,13 @@ def main():
 
     ap.add_argument("--spec", default="tpu-v5e", choices=sorted(SPECS),
                     help="core spec whose execution context lowers the cells")
+    ap.add_argument("--little-spec", default="", choices=[""] + sorted(SPECS),
+                    help="second device class: lower the cell class-sharded "
+                         "(pod 0 under --spec, pod 1 under this spec); needs "
+                         "--multi-pod.  The shard_map is fully manual, so "
+                         "intra-pod devices replicate their pod's program — "
+                         "the record shows the mixed program structure, not "
+                         "per-device memory at production intra-pod sharding")
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
@@ -252,6 +327,7 @@ def main():
                     seq_shard=not args.no_seq_shard,
                     tag=args.tag,
                     spec_name=args.spec,
+                    little_spec=args.little_spec,
                 )
                 if rec.get("skipped"):
                     n_skip += 1

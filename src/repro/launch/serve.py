@@ -20,6 +20,7 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.core.asymmetric import AsymmetricMesh, biglittle_classes
@@ -28,11 +29,11 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import model_zoo as Z
 
 
-def generate(cfg, params, prompts, gen_len: int, seq_cap: int):
+def generate(cfg, params, prompts, gen_len: int, seq_cap: int, decode=None):
     """Greedy decode: prefill via full forward, then token-by-token."""
 
     b, plen = prompts.shape
-    decode = jax.jit(Z.make_decode_fn(cfg))
+    decode = decode if decode is not None else jax.jit(Z.make_decode_fn(cfg))
     state = Z.init_decode_state(cfg, b, seq_cap)
 
     # Prefill by replaying the prompt through the decode step (simple and
@@ -50,6 +51,39 @@ def generate(cfg, params, prompts, gen_len: int, seq_cap: int):
     return np.concatenate(out, axis=1)
 
 
+def mixed_decode_step(cfg, asym, mesh, batch_padded: int, seq_cap: int):
+    """The decode fn wrapped so each pod decodes its request shard under
+    its own class's control tree (true CA-SAS serving: one SPMD step, two
+    per-class programs).  Decode is pure data parallelism over requests —
+    no cross-pod collectives, so no epilogue."""
+
+    state_spec = jax.eval_shape(
+        lambda: Z.init_decode_state(cfg, batch_padded, seq_cap)
+    )
+    sspecs = SH.pod_state_specs(state_spec)
+    bspecs = SH.pod_batch_specs({"tokens": 0})  # the decode batch tree
+    return asym.class_sharded(
+        Z.make_decode_fn(cfg),
+        mesh=mesh,
+        in_specs=(P(), bspecs, sspecs, P()),
+        out_specs=(P("pod"), sspecs),
+    )
+
+
+def pad_requests(prompts: np.ndarray, layout):
+    """Lay requests out pod-major per the chunk table; returns (padded,
+    order) with ``padded[order] == prompts`` row-for-row."""
+
+    c_max = layout.c_max
+    padded = np.zeros((len(layout.sizes) * c_max,) + prompts.shape[1:], prompts.dtype)
+    order, pos = [], 0
+    for i, size in enumerate(layout.sizes):
+        padded[i * c_max : i * c_max + size] = prompts[pos : pos + size]
+        order.extend(range(i * c_max, i * c_max + size))
+        pos += size
+    return padded, np.asarray(order, np.int64)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -60,12 +94,15 @@ def main():
     ap.add_argument("--strategy", default="ca-das")
     ap.add_argument("--device-class", default=None,
                     help="serve under this class's control tree (default: fastest)")
+    ap.add_argument("--class-sharded", default="auto", choices=["auto", "on", "off"],
+                    help="decode each pod's request shard under its own class's "
+                         "tree in one SPMD step; auto = on when the host has a "
+                         "device per pod")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = make_host_mesh()
     SH.use_mesh_for_activations(None)
 
     params = Z.init_params(jax.random.PRNGKey(0), cfg)
@@ -75,25 +112,58 @@ def main():
     # Asymmetric request routing: split the request batch across classes.
     asym = AsymmetricMesh(biglittle_classes(chips_per_pod=1), strategy=args.strategy,
                           batch_tile=1)
-    table = asym.chunk_table(args.batch)
-    print("request split across classes:", table.sizes())
+    if args.class_sharded == "on" and args.device_class is not None:
+        raise SystemExit(
+            "--class-sharded on serves every class simultaneously; "
+            "it cannot be combined with --device-class"
+        )
+    mixed = (
+        args.class_sharded != "off"
+        and args.device_class is None  # explicit class selection wins
+        and len(asym.classes) > 1
+        and jax.device_count() >= asym.n_pods
+    )
+    if args.class_sharded == "on" and not mixed:
+        raise SystemExit(
+            f"--class-sharded on needs {asym.n_pods} devices, "
+            f"have {jax.device_count()}"
+        )
+    layout = asym.batch_layout(args.batch)
+    print("request split across classes:", layout.sizes)
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len), dtype=np.int32)
     seq_cap = args.prompt_len + args.gen_len
 
-    # Every decode matmul runs under the serving class's control tree —
-    # the context is active while the decode fn traces (first call).
-    exec_ctx = asym.execution_context(args.device_class)
     t0 = time.time()
-    with exec_ctx:
-        out = generate(cfg, params, jnp.asarray(prompts), args.gen_len, seq_cap)
+    if mixed:
+        # One SPMD decode step, one program per class: pod i's shard runs
+        # under class(i)'s control tree (paper §5.3, serving side).
+        mesh = make_host_mesh(pod=asym.n_pods)
+        padded, order = pad_requests(prompts, layout)
+        step = mixed_decode_step(cfg, asym, mesh, padded.shape[0], seq_cap)
+        out_padded = generate(cfg, params, jnp.asarray(padded), args.gen_len,
+                              seq_cap, decode=jax.jit(step))
+        out = out_padded[order]
+        shard_classes = [(p.pod, p.device_class, p.block_source)
+                         for p in step.provenance]
+        device_class, exec_backend = "mixed", step.provenance[0].backend
+    else:
+        # Every decode matmul runs under the serving class's control tree —
+        # the context is active while the decode fn traces (first call).
+        exec_ctx = asym.execution_context(args.device_class)
+        with exec_ctx:
+            out = generate(cfg, params, jnp.asarray(prompts), args.gen_len, seq_cap)
+        shard_classes = None
+        device_class, exec_backend = exec_ctx.device_class, exec_ctx.backend()
     dt = time.time() - t0
     tput = args.batch * args.gen_len / dt
     print(json.dumps({
         "arch": cfg.name,
-        "device_class": exec_ctx.device_class,
-        "exec_backend": exec_ctx.backend(),
+        "device_class": device_class,
+        "exec_backend": exec_backend,
+        "class_sharded": mixed,
+        "shard_classes": shard_classes,
         "batch": args.batch,
         "generated": out.shape[1] - args.prompt_len,
         "wall_s": round(dt, 2),

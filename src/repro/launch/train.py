@@ -40,6 +40,10 @@ def main():
     ap.add_argument("--heterogeneous", action="store_true",
                     help="simulate a big+little two-pod fleet for the scheduler")
     ap.add_argument("--mesh", default="host", choices=["host", "16x16", "2x16x16"])
+    ap.add_argument("--class-sharded", default="auto", choices=["auto", "on", "off"],
+                    help="per-class programs in one SPMD step (shard_map over "
+                         "the pod axis); auto = on when the mesh has >1 class "
+                         "and enough devices for a pod axis")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     args = ap.parse_args()
@@ -47,12 +51,6 @@ def main():
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-
-    if args.mesh == "host":
-        mesh = make_host_mesh()
-    else:
-        mesh = make_production_mesh(multi_pod=args.mesh == "2x16x16")
-    SH.use_mesh_for_activations(mesh, seq_shard=False)
 
     asym = None
     if args.strategy != "none":
@@ -62,6 +60,20 @@ def main():
             else [DeviceClass("pod0", chips_per_pod=1), DeviceClass("pod1", chips_per_pod=1)]
         )
         asym = AsymmetricMesh(classes, strategy=args.strategy, batch_tile=2)
+
+    if args.mesh == "host":
+        # The class-sharded step needs a pod axis: carve one out of the
+        # host devices when the run wants it and the host has enough.
+        want_pods = (
+            args.class_sharded != "off"
+            and asym is not None
+            and len(asym.classes) > 1
+            and jax.device_count() >= asym.n_pods
+        )
+        mesh = make_host_mesh(pod=asym.n_pods if want_pods else 0)
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "2x16x16")
+    SH.use_mesh_for_activations(mesh, seq_shard=False)
 
     # Class-routed execution: the asymmetric mesh's primary control tree
     # governs every matmul in the step; homogeneous runs get the default
@@ -77,6 +89,7 @@ def main():
         ckpt_dir=args.ckpt_dir,
         ckpt_every=args.ckpt_every,
         n_micro=args.n_micro,
+        class_sharded={"auto": None, "on": True, "off": False}[args.class_sharded],
     )
     trainer = Trainer(
         cfg,
@@ -89,12 +102,20 @@ def main():
     t0 = time.time()
     history = trainer.run()
     dt = time.time() - t0
+    shard_classes = (
+        [(p.pod, p.device_class, p.block_source)
+         for p in trainer.class_sharded_step.provenance]
+        if trainer.class_sharded_step is not None
+        else None
+    )
     print(
         json.dumps(
             {
                 "arch": cfg.name,
                 "device_class": exec_ctx.device_class,
                 "exec_backend": exec_ctx.backend(),
+                "class_sharded": trainer.class_sharded_enabled(),
+                "shard_classes": shard_classes,
                 "steps": len(history),
                 "first_loss": history[0]["loss"],
                 "last_loss": history[-1]["loss"],

@@ -3,11 +3,14 @@
 Composes every substrate:
 
   * model zoo loss fn (+ masked loss for padded asymmetric batches),
-  * class-routed execution: the whole step traces under an
-    :class:`~repro.core.execution.ExecutionContext` (the asymmetric
-    mesh's primary control tree by default), so every projection/FFN/
-    lm-head matmul resolves its backend and block config from the
-    paper's per-class mechanism — no per-call threading (DESIGN.md §3),
+  * class-routed execution: on a multi-class mesh with a pod axis the
+    step runs *class-sharded* — one shard_map program in which every
+    pod's batch shard executes under its own class's control tree
+    simultaneously (true CA-SAS, DESIGN.md §2) with a mask-weighted
+    gradient psum keeping the update exact; otherwise the whole step
+    traces under a single :class:`~repro.core.execution.ExecutionContext`
+    (the asymmetric mesh's primary control tree by default) — either way
+    no per-call config threading (DESIGN.md §3),
   * grad accumulation + AdamW (fp32 master params, sharded opt state),
   * checkpoint/restart: periodic async snapshots; any exception classified
     as a *node failure* triggers restore-from-latest and continue (the
@@ -34,7 +37,7 @@ import numpy as np
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import ArchConfig
 from repro.core.asymmetric import AsymmetricMesh
-from repro.core.execution import ExecutionContext
+from repro.core.execution import ClassShardedFn, ExecutionContext
 from repro.data.pipeline import AsymmetricBatcher, SyntheticLM
 from repro.distributed import sharding as SH
 from repro.models import model_zoo as Z
@@ -56,6 +59,114 @@ class TrainerConfig:
     fsdp: bool = True
     strategy: str = "ca-das"
     log_every: int = 10
+    # True CA-SAS: per-class programs within one SPMD step (shard_map over
+    # the pod axis).  None = auto (on when the asym mesh has >1 class and
+    # the jax mesh has a matching pod axis); False = always the legacy
+    # single-primary-class context; True = required (raises if the mesh
+    # cannot support it).
+    class_sharded: Optional[bool] = None
+
+
+def _shard_weight(batch) -> jnp.ndarray:
+    """Valid-token weight of a batch (or micro-batch): mask sum, or the
+    row count when the batch carries no mask (every row valid)."""
+
+    if "mask" in batch:
+        return batch["mask"].sum().astype(jnp.float32)
+    return jnp.float32(jax.tree.leaves(batch)[0].shape[0])
+
+
+def _masked_micro_grads(loss_fn, params, batch, n_micro: int):
+    """Micro-batch accumulation weighted by per-micro valid tokens.
+
+    Returns the shard's *exact* masked mean ``(loss, metrics, grads)`` —
+    ``Σ_j w_j·x_j / Σ_j w_j`` over micro-batches — so a fully-padded
+    micro-batch contributes nothing and the cross-pod ``w_i/W`` scaling
+    composes to the global masked mean.  (The plain
+    ``accumulate_gradients`` takes the unweighted micro mean, which is
+    only exact when every micro-batch has the same valid count.)
+    """
+
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(acc, mb):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        w = _shard_weight(mb)
+        acc_g, acc_l, acc_w = acc
+        acc_g = jax.tree.map(lambda a, g: a + w * g.astype(jnp.float32), acc_g, grads)
+        return (acc_g, acc_l + w * loss, acc_w + w), (metrics, w)
+
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (acc_g, acc_l, acc_w), (ms, ws) = jax.lax.scan(
+        body, (zero_g, jnp.float32(0), jnp.float32(0)), micro
+    )
+    denom = jnp.maximum(acc_w, 1.0)
+    grads = jax.tree.map(lambda g: g / denom, acc_g)
+    metrics = jax.tree.map(lambda x: jnp.sum(x * ws) / denom, ms)
+    return acc_l / denom, metrics, grads
+
+
+def build_class_sharded_grad_step(
+    loss_fn,
+    asym: AsymmetricMesh,
+    mesh,
+    *,
+    n_micro: int = 1,
+    axis: str = "pod",
+) -> ClassShardedFn:
+    """``(params, batch) -> (loss, metrics, grads)`` with per-class programs.
+
+    Each pod shard computes its *local* loss/grads under its own class's
+    control tree (the switch branch traced under that class's execution
+    context); the shared epilogue — outside the switch, so every pod
+    participates — does the weighted cross-pod reduction that makes the
+    result exactly the global masked mean: with ``w_i`` the shard's valid
+    tokens and ``W = Σ w_i``, ``loss = Σ (w_i/W)·loss_i`` and likewise for
+    the gradients (a pod with no valid rows contributes zero).
+
+    With ``n_micro > 1`` the local accumulation weights each micro-batch
+    by *its* valid tokens (``_masked_micro_grads``) rather than the plain
+    unweighted micro mean: a shard's padding concentrates in its tail
+    micro-batches, and the unweighted mean would deflate that shard's
+    loss/grads before the ``w_i/W`` scaling double-counted the deficit.
+    ``n_micro`` must divide the per-shard (not global) row count.
+    """
+
+    def local_grads(params, batch):
+        if n_micro <= 1:
+            return O.accumulate_gradients(loss_fn, params, batch, 1)
+        return _masked_micro_grads(loss_fn, params, batch, n_micro)
+
+    def weighted_mean_epilogue(out, shard_args, ax):
+        if ax is None:  # single-class fallback: already the global mean
+            return out
+        loss, metrics, grads = out
+        _, batch = shard_args
+        w = _shard_weight(batch)
+        total = jax.lax.psum(w, ax)
+        scale = jnp.where(total > 0, w / jnp.maximum(total, 1.0), 0.0)
+        loss, metrics = jax.tree.map(
+            lambda x: jax.lax.psum(x * scale, ax), (loss, metrics)
+        )
+        grads = jax.tree.map(
+            lambda g: jax.lax.psum((g * scale).astype(g.dtype), ax), grads
+        )
+        return loss, metrics, grads
+
+    from jax.sharding import PartitionSpec as P
+
+    return asym.class_sharded(
+        local_grads,
+        mesh=mesh,
+        in_specs=(P(), P(axis)),          # params replicated, batch rows per pod
+        out_specs=(P(), P(), P()),        # psum'd: replicated across pods
+        axis=axis,
+        epilogue=weighted_mean_epilogue,
+    )
 
 
 class Trainer:
@@ -77,11 +188,12 @@ class Trainer:
         self.tcfg = tcfg
         self.opt_cfg = opt_cfg or O.AdamWConfig(total_steps=tcfg.steps)
         self.asym = asym
-        # Every matmul in the step runs under this context (paper §5.3:
-        # the executing class's control tree).  Defaults to the asymmetric
-        # mesh's primary (fastest) class — the single SPMD program is
-        # configured for the class that anchors the shared B panel; with
-        # no asym mesh the pre-context defaults apply unchanged.
+        # Ambient context for the *non*-class-sharded paths (init, and the
+        # whole step when the mixed path is off): the asymmetric mesh's
+        # primary (fastest) class, which anchors the shared B panel; with
+        # no asym mesh the pre-context defaults apply unchanged.  Under
+        # the class-sharded step each shard_map branch activates its own
+        # class's context on top of this one (innermost wins).
         self.exec_ctx = exec_ctx if exec_ctx is not None else (
             asym.execution_context() if asym is not None else None
         )
@@ -101,7 +213,80 @@ class Trainer:
 
         return self.exec_ctx if self.exec_ctx is not None else contextlib.nullcontext()
 
+    def class_sharded_enabled(self) -> bool:
+        """Is the per-class-programs (shard_map) step path active?
+
+        Auto mode requires a multi-class asym mesh *and* a jax mesh whose
+        ``pod`` axis matches the pod count; ``class_sharded=True`` makes a
+        mismatch an error instead of a silent fallback.
+        """
+
+        flag = self.tcfg.class_sharded
+        if flag is False or self.asym is None:
+            return False
+        shape = dict(getattr(self.mesh, "shape", {}))
+        ok = (
+            len(self.asym.classes) > 1
+            and shape.get("pod") == self.asym.n_pods
+        )
+        if flag is True and not ok:
+            raise ValueError(
+                "class_sharded=True requires a multi-class AsymmetricMesh "
+                f"and a mesh pod axis of size {self.asym.n_pods if self.asym else '?'}; "
+                f"mesh axes={shape}"
+            )
+        if flag is None:
+            # Auto mode only takes the fully-manual shard_map when it is
+            # free: non-pod axes of extent 1 (one device per pod).  Wider
+            # pods would replicate each pod's program across its devices
+            # (correct but redundant) — require the explicit flag for that.
+            intra = 1
+            for a, s in shape.items():
+                if a != "pod":
+                    intra *= s
+            ok = ok and intra == 1
+        return ok
+
     # -- compilation --------------------------------------------------------
+
+    def _make_train_step(self):
+        """The (un-jitted) step fn; per-class-sharded when the mesh allows."""
+
+        loss_fn = Z.make_loss_fn(self.arch)
+        opt_cfg, n_micro = self.opt_cfg, self.tcfg.n_micro
+
+        if self.class_sharded_enabled():
+            # True CA-SAS: every pod's shard of the batch runs under its
+            # own class's control tree inside one shard_map step; the
+            # weighted psum epilogue keeps gradients exactly the global
+            # masked mean.  The optimizer update happens outside the
+            # shard_map on the already-reduced gradients.
+            grad_fn = build_class_sharded_grad_step(
+                loss_fn, self.asym, self.mesh, n_micro=n_micro
+            )
+            self.class_sharded_step = grad_fn
+
+            def train_step(params, opt_state, batch):
+                loss, metrics, grads = grad_fn(params, batch)
+                params, opt_state, om = O.adamw_update(params, grads, opt_state, opt_cfg)
+                metrics = dict(metrics)
+                metrics.update(om)
+                metrics["loss"] = loss
+                return params, opt_state, metrics
+
+            return train_step
+
+        self.class_sharded_step = None
+
+        def train_step(params, opt_state, batch):
+            loss, metrics, grads = O.accumulate_gradients(loss_fn, params, batch, n_micro)
+            params, opt_state, om = O.adamw_update(params, grads, opt_state, opt_cfg)
+            metrics = dict(metrics)
+            metrics.update(om)
+            metrics["loss"] = loss
+            return params, opt_state, metrics
+
+        return train_step
 
     def _build(self):
         arch, mesh = self.arch, self.mesh
@@ -119,19 +304,8 @@ class Trainer:
                 O.init_opt_state, out_shardings=self.opt_sharding
             )(self.params)
 
-        loss_fn = Z.make_loss_fn(arch)
-        opt_cfg, n_micro = self.opt_cfg, self.tcfg.n_micro
-
-        def train_step(params, opt_state, batch):
-            loss, metrics, grads = O.accumulate_gradients(loss_fn, params, batch, n_micro)
-            params, opt_state, om = O.adamw_update(params, grads, opt_state, opt_cfg)
-            metrics = dict(metrics)
-            metrics.update(om)
-            metrics["loss"] = loss
-            return params, opt_state, metrics
-
         self.train_step = jax.jit(
-            train_step,
+            self._make_train_step(),
             out_shardings=(self.param_sharding, self.opt_sharding, None),
             donate_argnums=(0, 1),
         )
@@ -190,19 +364,8 @@ class Trainer:
         self._build_step_only()
 
     def _build_step_only(self):
-        loss_fn = Z.make_loss_fn(self.arch)
-        opt_cfg, n_micro = self.opt_cfg, self.tcfg.n_micro
-
-        def train_step(params, opt_state, batch):
-            loss, metrics, grads = O.accumulate_gradients(loss_fn, params, batch, n_micro)
-            params, opt_state, om = O.adamw_update(params, grads, opt_state, opt_cfg)
-            metrics = dict(metrics)
-            metrics.update(om)
-            metrics["loss"] = loss
-            return params, opt_state, metrics
-
         self.train_step = jax.jit(
-            train_step,
+            self._make_train_step(),
             out_shardings=(self.param_sharding, self.opt_sharding, None),
             donate_argnums=(0, 1),
         )
@@ -248,4 +411,9 @@ class Trainer:
         return history
 
 
-__all__ = ["Trainer", "TrainerConfig", "SimulatedFailure"]
+__all__ = [
+    "Trainer",
+    "TrainerConfig",
+    "SimulatedFailure",
+    "build_class_sharded_grad_step",
+]

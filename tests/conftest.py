@@ -1,8 +1,13 @@
 import os
 
-# Tests run on the single host CPU device; the dry-run (and only the
+# Tests run on 8 forced host CPU devices so the class-sharded shard_map
+# paths (2-pod meshes) are exercised everywhere; the dry-run (and only the
 # dry-run) forces 512 placeholder devices in its own subprocess.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 " + os.environ.get("XLA_FLAGS", "")
+    ).strip()
 
 import jax  # noqa: E402
 import pytest  # noqa: E402

@@ -31,6 +31,25 @@ class TestStatic:
         assert sum(sizes) == 1000
         assert sizes[0] % 152 == 0  # big cluster aligned to its m_c
 
+    def test_ca_sas_starved_class_alone_goes_partial(self):
+        # Regression: one starved class (tile > its share) must not strip
+        # alignment from everyone — only the starved class takes a partial
+        # panel; the big class keeps its m_c alignment.
+        t = S.ca_sas_partition(1000, ratios=[20.0, 1.0], tiles=[152, 64])
+        sizes = t.sizes()
+        assert sum(sizes) == 1000
+        assert sizes[0] % 152 == 0  # big stays aligned (was unaligned pre-fix)
+        assert sizes[1] > 0  # little runs a partial panel + the residue
+
+    def test_ca_sas_three_classes_starvation_localized(self):
+        # Middle class starved; the other two keep their own alignment.
+        t = S.ca_sas_partition(2048, ratios=[8.0, 0.2, 4.0], tiles=[128, 200, 64])
+        sizes = t.sizes()
+        assert sum(sizes) == 2048
+        assert sizes[0] % 128 == 0
+        assert sizes[2] % 64 == 0
+        assert 0 < sizes[1] < 200
+
     def test_validate_rejects_bad_table(self):
         tb = S.ChunkTable(10, (S.Chunk(0, 0, 4), S.Chunk(1, 5, 5)))
         with pytest.raises(ValueError):
@@ -60,6 +79,23 @@ class TestDynamic:
         b = S.das_schedule(500, rates=[2.0, 1.0], strides=[50, 20])
         assert a.assignments == b.assignments
 
+    def test_das_dead_pod_skipped(self):
+        # Regression: a zero-rate class used to raise ZeroDivisionError;
+        # now the dead pod simply never grabs work.
+        r = S.das_schedule(1000, rates=[4.0, 0.0, 1.0], strides=[152, 32, 32])
+        sizes = r.sizes()
+        assert sum(sizes) == 1000
+        assert sizes[1] == 0
+        assert sizes[0] > sizes[2] > 0
+
+    def test_das_all_dead_raises(self):
+        with pytest.raises(ValueError, match="zero"):
+            S.das_schedule(100, rates=[0.0, 0.0], strides=[8, 8])
+
+    def test_das_zero_units_trivial(self):
+        r = S.das_schedule(0, rates=[0.0, 0.0], strides=[8, 8])
+        assert r.assignments == [] and r.makespan == 0.0
+
 
 class TestDynamicScheduler:
     def test_converges_to_measured_ratio(self):
@@ -86,3 +122,14 @@ class TestDynamicScheduler:
 
     def test_balanced_ratio(self):
         assert S.balanced_ratio([9.6, 2.4]) == pytest.approx(4.0)
+
+    def test_balanced_ratio_order_and_arity(self):
+        # Regression: used to hardcode rates[0]/rates[1] — crashed on one
+        # class and silently inverted on unsorted rates.
+        assert S.balanced_ratio([2.4, 9.6]) == pytest.approx(4.0)
+        assert S.balanced_ratio([5.0]) == 1.0
+        assert S.balanced_ratio([1.0, 4.0, 2.0]) == pytest.approx(4.0)
+        with pytest.raises(ValueError):
+            S.balanced_ratio([])
+        with pytest.raises(ValueError):
+            S.balanced_ratio([1.0, 0.0])
