@@ -27,7 +27,7 @@ import numpy as np
 
 from benchmarks.harness import Row, time_fn, write_csv, write_json
 from repro.core.blocking import TPU_V5E, BlockConfig, derive_block_config, search_grid
-from repro.kernels.gemm import gemm_pallas
+from repro.kernels.gemm import GEMM_KERNELS
 from repro.kernels.ref import blocked_gemm_tpu_ref, gemm_ref
 
 
@@ -56,22 +56,29 @@ def tuned_vs_analytical(
 
     Uses the deterministic ``repro.tuning`` cost-model backend so the
     comparison is reproducible on any host; on TPU the same search can be
-    re-run with ``--backend wallclock`` via the tune CLI.
+    re-run with ``--backend wallclock`` via the tune CLI.  The micro-kernel
+    variant is part of the search space; every record carries the chosen
+    ``backend`` so the committed baseline guards the variant-selection
+    path too.
     """
 
+    from repro.tuning.candidates import KERNEL_BACKENDS
     from repro.tuning.measure import make_backend
     from repro.tuning.tune import search_shape
 
     rows, records = [], []
     backend = make_backend("cost-model", spec=TPU_V5E)
     for m, k, n in shapes:
-        res = search_shape(m, k, n, spec=TPU_V5E, dtype_bytes=2, backend=backend)
+        res = search_shape(
+            m, k, n, spec=TPU_V5E, dtype_bytes=2, backend=backend,
+            kernel_backends=KERNEL_BACKENDS,
+        )
         rows.append(
             Row(
                 f"gemm_tuned_vs_analytical_{m}x{k}x{n}",
                 res.best_time_s * 1e6,
                 f"speedup={res.speedup:.3f} tuned=({res.best.bm},{res.best.bk},"
-                f"{res.best.bn}) analytical=({res.analytical.bm},"
+                f"{res.best.bn})@{res.best_backend} analytical=({res.analytical.bm},"
                 f"{res.analytical.bk},{res.analytical.bn})",
             )
         )
@@ -82,13 +89,16 @@ def tuned_vs_analytical(
                 speedup_vs_analytical=res.speedup,
                 tuned_block=[res.best.bm, res.best.bk, res.best.bn],
                 analytical_block=[res.analytical.bm, res.analytical.bk, res.analytical.bn],
+                backend=res.best_backend,
                 n_candidates=res.n_candidates,
             )
         )
     return rows, records
 
 
-def run() -> list[Row]:
+def run(pallas_backends=None) -> list[Row]:
+    if pallas_backends is None:
+        pallas_backends = tuple(GEMM_KERNELS)  # every registered variant
     rows = []
     records = []
     rng = np.random.default_rng(0)
@@ -116,16 +126,22 @@ def run() -> list[Row]:
     records.append(_record("blocked_ref", 512, 512, 512, us))
     rows.append(Row("gemm_blocked_ref_512", us, f"gflops={_gflops(512,512,512,us):.2f}"))
 
-    # Pallas interpret-mode correctness-path timing (small).
+    # Pallas interpret-mode correctness-path timing (small), per variant.
     ai = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
     bi = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
-    us = time_fn(
-        lambda: jax.block_until_ready(gemm_pallas(ai, bi, cfg, interpret=True)), reps=3,
-        warmup=1,
-    )
-    lines.append(f"pallas_interpret,256,{us:.1f},{_gflops(256,256,256,us):.2f}")
-    records.append(_record("pallas_interpret", 256, 256, 256, us, note="not perf"))
-    rows.append(Row("gemm_pallas_interpret_256", us, "correctness-path (not perf)"))
+    for name in pallas_backends:
+        kern = GEMM_KERNELS[name]
+        us = time_fn(
+            lambda: jax.block_until_ready(kern(ai, bi, cfg, interpret=True)),
+            reps=3, warmup=1,
+        )
+        lines.append(f"{name}_interpret,256,{us:.1f},{_gflops(256,256,256,us):.2f}")
+        records.append(
+            _record(f"{name}_interpret", 256, 256, 256, us, note="not perf")
+        )
+        rows.append(
+            Row(f"gemm_{name}_interpret_256", us, "correctness-path (not perf)")
+        )
     write_csv("gemm_wallclock.csv", "impl,m,us,gflops", lines)
 
     # Section 3.3 protocol: coarse sweep -> refine around the winner.
@@ -193,8 +209,17 @@ def main(argv=None) -> None:
         "--cost-model", action="store_true",
         help="deterministic tuned-vs-analytical records only (the CI baseline)",
     )
+    ap.add_argument(
+        "--backend", default="all", choices=sorted(GEMM_KERNELS) + ["all"],
+        help="which Pallas micro-kernel variant the interpret tier times "
+             "(wallclock mode only; the cost-model baseline always searches "
+             "every variant)",
+    )
     args = ap.parse_args(argv)
-    rows = run_cost_model() if args.cost_model else run()
+    variants = (
+        tuple(GEMM_KERNELS) if args.backend == "all" else (args.backend,)
+    )
+    rows = run_cost_model() if args.cost_model else run(pallas_backends=variants)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r.name},{r.us_per_call:.1f},{r.derived}")

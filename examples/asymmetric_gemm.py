@@ -109,7 +109,10 @@ def main():
         )
         c = jax.jit(step)(a, bmat)
         err = float(jnp.max(jnp.abs(c - ref)))
-        shards = ", ".join(f"pod{p.pod}->{p.device_class}"
+        # Provenance names the micro-kernel variant per shard: on TPU at
+        # large tree shapes little runs the VMEM-lean "pallas_lean" while
+        # big keeps the pipelined "pallas" — two kernels, one SPMD step.
+        shards = ", ".join(f"pod{p.pod}->{p.device_class}@{p.backend}"
                            for p in step.provenance)
         print(f"\nclass-sharded single step: {shards}; max|err|={err:.2e}")
         assert err < 1e-3

@@ -233,6 +233,27 @@ class AsymmetricMesh:
             self._trees[shape] = trees
         return trees
 
+    def class_backends(
+        self, shape: Optional[tuple[int, int, int]] = None
+    ) -> dict[str, str]:
+        """Resolved micro-kernel variant per class (paper §5.3).
+
+        The per-class trees may name *different* ``execution.BACKENDS``
+        entries — e.g. ``big → "pallas"`` and ``little → "pallas_lean"``
+        when only the lean working set fits little's VMEM, or when the
+        tuning cache recorded the lean variant as that class's winner.  A
+        mixed :meth:`class_sharded` step then runs both variants
+        simultaneously (one per pod shard); ``ShardProvenance.backend``
+        records which variant each shard executed.
+        """
+
+        from repro.core import execution as X
+
+        return {
+            name: X.resolve_backend(tree.backend)
+            for name, tree in self.control_trees(shape).items()
+        }
+
     def execution_context(
         self,
         class_name: Optional[str] = None,

@@ -128,14 +128,19 @@ class BlockConfig:
     acc_bytes: int = 4            # fp32 accumulator
 
     def vmem_bytes(self, double_buffer: bool = True) -> int:
+        """Working set: ``double_buffer=False`` is the VMEM-lean k-streaming
+        kernel (``gemm_pallas_lean``), which stages one A/B block at a time
+        instead of the pipelined pair — half the input footprint, so larger
+        (bm, bn) panels fit the same budget."""
+
         mult = 2 if double_buffer else 1
         a = self.bm * self.bk * self.dtype_bytes
         b = self.bk * self.bn * self.dtype_bytes
         c = self.bm * self.bn * self.acc_bytes
         return mult * (a + b) + c
 
-    def fits(self, spec: TpuCoreSpec = TPU_V5E) -> bool:
-        return self.vmem_bytes() <= spec.vmem_bytes * spec.vmem_fill
+    def fits(self, spec: TpuCoreSpec = TPU_V5E, *, double_buffer: bool = True) -> bool:
+        return self.vmem_bytes(double_buffer) <= spec.vmem_bytes * spec.vmem_fill
 
     def arithmetic_intensity(self) -> float:
         """FLOPs per HBM byte moved for one (bm, bn) output block column."""
@@ -230,6 +235,7 @@ def derive_block_config(
     max_bm: int = 1024,
     max_bk: int = 2048,
     max_bn: int = 1024,
+    double_buffer: bool = True,
 ) -> BlockConfig:
     """Pick ``(bm, bk, bn)`` maximizing arithmetic intensity under VMEM.
 
@@ -239,6 +245,11 @@ def derive_block_config(
     ``k_c`` to fill L1), then balance ``bm``/``bn``.  All dims are
     MXU/lane aligned; dims are clamped to the (padded) problem size so tiny
     problems do not claim VMEM they cannot use.
+
+    ``double_buffer=False`` derives for the VMEM-lean k-streaming kernel
+    (single-buffered input staging): the same budget admits larger
+    (bm, bn) panels — the paper's §5.3 observation that a class with less
+    fast memory wants a *different micro-kernel*, not just smaller blocks.
     """
 
     budget = int(spec.vmem_bytes * spec.vmem_fill)
@@ -255,13 +266,14 @@ def derive_block_config(
         while bn >= align:
             # Largest aligned bk that fits the budget for this (bm, bn).
             acc = bm * bn * 4
-            per_k = 2 * (bm + bn) * dtype_bytes  # double-buffered A+B per unit bk
+            # A+B staging per unit bk: pipelined pair or one lean buffer.
+            per_k = (2 if double_buffer else 1) * (bm + bn) * dtype_bytes
             if acc >= budget:
                 bn //= 2
                 continue
             bk = _round_down(min(pk, (budget - acc) // per_k), align)
             cfg = BlockConfig(bm=bm, bk=bk, bn=bn, dtype_bytes=dtype_bytes)
-            if cfg.fits(spec):
+            if cfg.fits(spec, double_buffer=double_buffer):
                 if best is None or cfg.arithmetic_intensity() > best.arithmetic_intensity():
                     best = cfg
                 elif (

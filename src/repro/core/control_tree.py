@@ -95,6 +95,19 @@ def build_control_trees(
     tuned entry is honored only if it agrees on the shared ``bk``;
     otherwise the class falls back to the ``bm`` re-derivation (a tuned
     panel stride cannot override the panel it shares).
+
+    **Micro-kernel variants** (paper §5.3: each class may get its own
+    micro-kernel, not just its own blocking): when ``backend`` is a
+    Pallas-family backend, a class's tree may name the VMEM-lean variant
+    (``execution.LEAN_VARIANTS``) instead —
+
+    * a tuned cache entry that *records* a kernel variant selects it
+      (mapped onto ``backend``'s compiled/interpret family), and
+    * under the shared-B-panel constraint, a class whose VMEM cannot hold
+      the shared panel double-buffered keeps the **full panel on the lean
+      kernel** when its single-buffered working set fits, rather than
+      shrinking ``bm`` — the lean trade (no DMA/compute overlap, half the
+      staging footprint) beats crippling the panel's arithmetic intensity.
     """
 
     names = list(specs)
@@ -102,26 +115,57 @@ def build_control_trees(
         raise ValueError("need at least one device class")
     first = names[0]
     dtype_name = X.dtype_name_for_bytes(dtype_bytes)
+    lean_backend = X.LEAN_VARIANTS.get(backend)  # None for xla / lean itself
+
+    def _recorded_variant(spec: B.TpuCoreSpec) -> str:
+        """Backend for a tuned entry: the cache-recorded variant, mapped
+        onto the requested backend's family; XLA trees stay XLA."""
+
+        if not use_cache or backend == "xla":
+            return backend
+        recorded = X.tuned_kernel_backend(
+            m, k, n, spec=spec, dtype_name=dtype_name
+        )
+        if recorded is None or recorded == "xla":
+            return backend
+        return X.align_backend_family(recorded, backend)
 
     def _resolve(spec: B.TpuCoreSpec) -> tuple[B.BlockConfig, str]:
+        # Resolve under the buffering model of the kernel the tree will
+        # actually name: an entry recorded for the lean kernel pairs with
+        # the lean backend (set by _recorded_variant below), so its
+        # single-buffer-only block stays acceptable here.
+        db = X.backend_double_buffers(_recorded_variant(spec))
         if use_cache:
             return X.resolve_block_config(
-                m, k, n, spec=spec, dtype_name=dtype_name, dtype_bytes=dtype_bytes
+                m, k, n, spec=spec, dtype_name=dtype_name, dtype_bytes=dtype_bytes,
+                double_buffer=db,
             )
         return (
-            B.derive_block_config(m, k, n, spec=spec, dtype_bytes=dtype_bytes),
+            B.derive_block_config(
+                m, k, n, spec=spec, dtype_bytes=dtype_bytes, double_buffer=db
+            ),
             "analytical",
         )
 
     base, base_src = _resolve(specs[first])
     trees: dict[str, ControlTree] = {}
     for name in names:
+        class_backend = backend
         if not cache_aware or name == first:
             blk, src = base, base_src
+            if src == "tuned":
+                # Always the *first* class's recorded variant: with
+                # cache_aware=False every class mirrors the first class's
+                # configuration wholesale (the single-control-tree SAS
+                # baseline) — consulting each class's own entry here would
+                # leak per-class variants into a deliberately uniform run.
+                class_backend = _recorded_variant(specs[first])
         elif coarse_loop == "rows":
             # Shared B panel: a tuned entry for this class may only be used
-            # if it agrees on the common bk; otherwise re-derive bm for
-            # this class's VMEM at the shared bk.
+            # if it agrees on the common bk; otherwise keep the full shared
+            # panel on the lean kernel when only its single-buffered
+            # working set fits this class's VMEM, else re-derive bm.
             tuned = (
                 X.tuned_block_config(
                     m, k, n,
@@ -134,17 +178,34 @@ def build_control_trees(
             )
             if tuned is not None and tuned.bk == base.bk:
                 blk, src = tuned, "tuned"
+                class_backend = _recorded_variant(specs[name])
             else:
-                blk, src = _rederive_bm(specs[name], base, dtype_bytes), "analytical"
+                blk = _rederive_bm(
+                    specs[name], base, dtype_bytes,
+                    double_buffer=X.backend_double_buffers(backend),
+                )
+                src = "analytical"
+                if lean_backend is not None:
+                    # The lean kernel's single-buffered working set keeps a
+                    # larger (often the full) shared panel in this class's
+                    # VMEM: prefer the bigger panel on the lean variant
+                    # over crippling bm under the pipelined kernel.
+                    lean_blk = _rederive_bm(
+                        specs[name], base, dtype_bytes, double_buffer=False
+                    )
+                    if lean_blk.bm > blk.bm:
+                        blk, class_backend = lean_blk, lean_backend
         else:
             # Independent panels (Loop 1): fully independent resolution.
             blk, src = _resolve(specs[name])
+            if src == "tuned":
+                class_backend = _recorded_variant(specs[name])
         trees[name] = ControlTree(
             device_class=name,
             block=blk,
             coarse_loop=coarse_loop,
             fine_loop=fine_loop,
-            backend=backend,
+            backend=class_backend,
             spec=specs[name],
             block_source=src,
             problem_shape=(m, k, n),
@@ -152,13 +213,19 @@ def build_control_trees(
     return trees
 
 
-def _rederive_bm(spec: B.TpuCoreSpec, base: B.BlockConfig, dtype_bytes: int) -> B.BlockConfig:
+def _rederive_bm(
+    spec: B.TpuCoreSpec,
+    base: B.BlockConfig,
+    dtype_bytes: int,
+    *,
+    double_buffer: bool = True,
+) -> B.BlockConfig:
     budget = int(spec.vmem_bytes * spec.vmem_fill)
     bk, bn = base.bk, base.bn
     bm = base.bm
     while bm > spec.mxu:
         cfg = B.BlockConfig(bm=bm, bk=bk, bn=bn, dtype_bytes=dtype_bytes)
-        if cfg.vmem_bytes() <= budget:
+        if cfg.vmem_bytes(double_buffer) <= budget:
             break
         bm //= 2
     cfg = B.BlockConfig(bm=max(bm, spec.mxu), bk=bk, bn=bn, dtype_bytes=dtype_bytes)

@@ -57,7 +57,9 @@ if TYPE_CHECKING:  # control_tree imports Backend from here; keep it one-way.
 # Backend dispatch table (the one backend vocabulary)
 # ---------------------------------------------------------------------------
 
-Backend = Literal["xla", "pallas", "pallas_interpret"]
+Backend = Literal[
+    "xla", "pallas", "pallas_interpret", "pallas_lean", "pallas_lean_interpret"
+]
 
 
 def _xla_gemm(a2, b, config, out_dtype):
@@ -82,6 +84,18 @@ def _pallas_interpret_gemm(a2, b, config, out_dtype):
     return gemm_pallas(a2, b, config, out_dtype=out_dtype, interpret=True)
 
 
+def _pallas_lean_gemm(a2, b, config, out_dtype):
+    from repro.kernels.gemm import gemm_pallas_lean
+
+    return gemm_pallas_lean(a2, b, config, out_dtype=out_dtype)
+
+
+def _pallas_lean_interpret_gemm(a2, b, config, out_dtype):
+    from repro.kernels.gemm import gemm_pallas_lean
+
+    return gemm_pallas_lean(a2, b, config, out_dtype=out_dtype, interpret=True)
+
+
 # name -> (a2, b, config, out_dtype) -> 2-D result.  The keys are the only
 # backend names the stack accepts; ``"auto"`` is a request resolved by
 # :func:`resolve_backend`, never a table entry.
@@ -89,9 +103,83 @@ BACKENDS: dict[str, Callable] = {
     "xla": _xla_gemm,
     "pallas": _pallas_gemm,
     "pallas_interpret": _pallas_interpret_gemm,
+    "pallas_lean": _pallas_lean_gemm,
+    "pallas_lean_interpret": _pallas_lean_interpret_gemm,
 }
 
 BACKEND_NAMES: tuple[str, ...] = tuple(BACKENDS)
+
+# Compiled backend -> its CPU-runnable interpret twin (identity for
+# backends that already run anywhere).  The parity harness walks BACKENDS
+# through this map, so every new table entry MUST be registered here —
+# tests/test_backend_parity.py fails loudly on a missing twin.
+INTERPRET_TWIN: dict[str, str] = {
+    "xla": "xla",
+    "pallas": "pallas_interpret",
+    "pallas_interpret": "pallas_interpret",
+    "pallas_lean": "pallas_lean_interpret",
+    "pallas_lean_interpret": "pallas_lean_interpret",
+}
+
+# Pipelined backend -> the VMEM-lean variant of the same execution family
+# (compiled or interpret).  Control trees use this to keep a class's full
+# shared panel when only the lean working set fits its VMEM.
+LEAN_VARIANTS: dict[str, str] = {
+    "pallas": "pallas_lean",
+    "pallas_interpret": "pallas_lean_interpret",
+}
+
+# Backends whose kernels stage inputs double-buffered; the lean variants
+# single-buffer (BlockConfig.vmem_bytes(double_buffer=False) is their
+# working-set model).  "xla" ignores block configs entirely.
+_LEAN_BACKENDS = frozenset(LEAN_VARIANTS.values())
+
+
+def interpret_twin(name: str) -> str:
+    """The CPU-runnable twin of a backend (validating both names)."""
+
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}")
+    twin = INTERPRET_TWIN.get(name)
+    if twin is None or twin not in BACKENDS:
+        raise ValueError(
+            f"backend {name!r} has no interpret twin registered in "
+            f"INTERPRET_TWIN — add one so the parity harness can cover it"
+        )
+    return twin
+
+
+def backend_double_buffers(name: str) -> bool:
+    """Does this backend's kernel stage inputs double-buffered?
+
+    Decides which VMEM working-set model governs block-config feasibility
+    (``BlockConfig.fits(spec, double_buffer=...)``).
+    """
+
+    return name not in _LEAN_BACKENDS
+
+
+# interpret name -> its compiled family (inverse of INTERPRET_TWIN,
+# identity pairs dropped): "pallas_lean_interpret" -> "pallas_lean".
+_COMPILED_TWIN: dict[str, str] = {
+    t: c for c, t in INTERPRET_TWIN.items() if c != t
+}
+
+
+def align_backend_family(variant: str, requested: str) -> str:
+    """Map a recorded kernel variant onto ``requested``'s execution family.
+
+    A tuning-cache entry normally records the *hardware* variant
+    (``"pallas_lean"``); when the tree is built for interpret-mode
+    execution the same variant must run through its interpret twin — and,
+    symmetrically, an interpret name that leaked into a cache (hand-edited
+    or merged from a CPU run) must map back to the compiled kernel on a
+    hardware tree rather than silently running the Python interpreter.
+    """
+
+    if requested.endswith("_interpret"):
+        return interpret_twin(variant)
+    return _COMPILED_TWIN.get(variant, variant)
 
 
 def on_tpu() -> bool:
@@ -154,6 +242,31 @@ def tuned_block_config(
     )
 
 
+def tuned_kernel_backend(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    spec: Optional[TpuCoreSpec] = None,
+    dtype_name: str = "bfloat16",
+) -> Optional[str]:
+    """The kernel variant the tuner recorded for this entry, or None.
+
+    The cache entry's ``"backend"`` field holds the winning micro-kernel
+    variant (a :data:`BACKENDS` key) since the variant search landed;
+    older caches stored the *measurement* backend there (``"cost-model"``/
+    ``"wallclock"``) — any value outside the dispatch table is ignored, so
+    old caches keep working with the default kernel.
+    """
+
+    from repro.tuning.cache import cached_kernel_backend
+
+    name = cached_kernel_backend(
+        m, k, n, dtype_name, spec_name=spec.name if spec is not None else None
+    )
+    return name if name in BACKENDS else None
+
+
 def resolve_block_config(
     m: int,
     k: int,
@@ -162,20 +275,43 @@ def resolve_block_config(
     spec: Optional[TpuCoreSpec] = None,
     dtype_name: str = "bfloat16",
     dtype_bytes: int = 2,
+    double_buffer: bool = True,
 ) -> tuple[BlockConfig, str]:
     """Tuned config on cache hit, analytical derivation on miss.
 
     Returns ``(config, source)`` with ``source in ("tuned", "analytical")``
     so callers (control trees, tests) can record provenance.
+    ``double_buffer`` names the *consuming kernel's* buffering model: the
+    analytical fallback derives under it, and a tuned hit is honored only
+    if the consumer can hold it — an entry recorded for the lean kernel
+    (or one that overflows the spec double-buffered) must not reach the
+    pipelined kernel, whose working set is twice the one the entry was
+    validated under.  (The converse is safe: any double-buffer-feasible
+    block is lean-feasible.)
     """
 
     cfg = tuned_block_config(
         m, k, n, spec=spec, dtype_name=dtype_name, dtype_bytes=dtype_bytes
     )
     if cfg is not None:
-        return cfg, "tuned"
+        usable = True
+        if double_buffer:
+            recorded = tuned_kernel_backend(
+                m, k, n, spec=spec, dtype_name=dtype_name
+            )
+            if recorded is not None and not backend_double_buffers(recorded):
+                usable = False  # a lean-only winner: pipelined would spill
+            elif spec is not None and not cfg.fits(spec):
+                usable = False
+        if usable:
+            return cfg, "tuned"
     return (
-        derive_block_config(m, k, n, spec=spec or TPU_V5E, dtype_bytes=dtype_bytes),
+        derive_block_config(
+            m, k, n,
+            spec=spec or TPU_V5E,
+            dtype_bytes=dtype_bytes,
+            double_buffer=double_buffer,
+        ),
         "analytical",
     )
 
@@ -273,28 +409,52 @@ class ExecutionContext:
         ``build_control_trees`` enforces; else the dtype-re-labelled
         tree.block (VMEM-fit guarded).  Off-bucket shapes re-resolve
         against this class's spec.
+
+        VMEM-fit checks use the *tree backend's* buffering model: a lean
+        (single-buffered) backend admits blocks the pipelined kernel could
+        not hold — that is the point of the variant.  A tuned entry is
+        likewise honored only if this tree's kernel can hold it (a
+        lean-only winner must not reach a pipelined tree).  Hand-built
+        blocks are clamped to the lane-padded call dims — they apply to
+        *every* call shape, and an un-clamped oversize block would now be
+        rejected by the kernels' shape validation instead of silently
+        padding.
         """
 
         tree = self.tree
+        db = backend_double_buffers(self.backend())
         hand_built = tree.problem_shape is None
+
+        def _clamp(blk: BlockConfig) -> BlockConfig:
+            lane = tree.spec.lane
+            pad = lambda d: max(lane, ((d + lane - 1) // lane) * lane)  # noqa: E731
+            return dataclasses.replace(
+                blk,
+                bm=min(blk.bm, pad(m)),
+                bk=min(blk.bk, pad(k)),
+                bn=min(blk.bn, pad(n)),
+            )
+
         reuse = hand_built or _same_bucket((m, k, n), tree.problem_shape)
         if reuse and tree.block.dtype_bytes == dtype_bytes:
-            return tree.block
+            return _clamp(tree.block) if hand_built else tree.block
         if reuse:
             relabeled = dataclasses.replace(tree.block, dtype_bytes=dtype_bytes)
-            if hand_built and relabeled.fits(tree.spec):
-                return relabeled
+            if hand_built and relabeled.fits(tree.spec, double_buffer=db):
+                return _clamp(relabeled)
         tuned = tuned_block_config(
             m, k, n, spec=tree.spec, dtype_name=dtype_name, dtype_bytes=dtype_bytes
         )
-        if tuned is not None and (
-            not reuse or tree.coarse_loop != "rows" or tuned.bk == tree.block.bk
+        if (
+            tuned is not None
+            and (not reuse or tree.coarse_loop != "rows" or tuned.bk == tree.block.bk)
+            and tuned.fits(tree.spec, double_buffer=db)
         ):
             return tuned
-        if reuse and not hand_built and relabeled.fits(tree.spec):
+        if reuse and not hand_built and relabeled.fits(tree.spec, double_buffer=db):
             return relabeled
         return derive_block_config(
-            m, k, n, spec=tree.spec, dtype_bytes=dtype_bytes
+            m, k, n, spec=tree.spec, dtype_bytes=dtype_bytes, double_buffer=db
         )
 
 
@@ -541,9 +701,13 @@ __all__ = [
     "Backend",
     "BACKENDS",
     "BACKEND_NAMES",
+    "INTERPRET_TWIN",
+    "LEAN_VARIANTS",
     "ClassShardedFn",
     "ExecutionContext",
     "ShardProvenance",
+    "align_backend_family",
+    "backend_double_buffers",
     "class_sharded",
     "compat_shard_map",
     "context_for_tree",
@@ -551,8 +715,10 @@ __all__ = [
     "default_context",
     "dispatch_gemm",
     "dtype_name_for_bytes",
+    "interpret_twin",
     "on_tpu",
     "resolve_backend",
     "resolve_block_config",
     "tuned_block_config",
+    "tuned_kernel_backend",
 ]

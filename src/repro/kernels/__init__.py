@@ -7,7 +7,14 @@ dispatch; ``ref.py`` holds the pure-jnp oracles.
 """
 
 from repro.kernels.ops import gemm, gemm_with_tree, linear
-from repro.kernels.gemm import gemm_pallas
+from repro.kernels.gemm import gemm_pallas, gemm_pallas_lean
 from repro.kernels.flash_attention import flash_attention
 
-__all__ = ["gemm", "gemm_with_tree", "linear", "gemm_pallas", "flash_attention"]
+__all__ = [
+    "gemm",
+    "gemm_with_tree",
+    "linear",
+    "gemm_pallas",
+    "gemm_pallas_lean",
+    "flash_attention",
+]

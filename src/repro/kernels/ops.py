@@ -20,8 +20,15 @@ Backends (the dispatch table lives in ``execution.BACKENDS``):
   * ``"xla"``              — jnp.dot (the portable reference path; also what
                              the SPMD dry-run lowers, since Mosaic cannot
                              target the CPU backend),
-  * ``"pallas"``           — the blocked TPU kernel (hot path on TPU),
-  * ``"pallas_interpret"`` — kernel body interpreted on CPU (validation).
+  * ``"pallas"``           — the blocked pipelined TPU kernel (hot path on
+                             TPU for full-VMEM classes),
+  * ``"pallas_lean"``      — the VMEM-lean k-streaming variant (single-
+                             buffered staging, resident accumulator) for
+                             little-VMEM classes — the paper's per-class
+                             micro-kernel, selected by that class's tree,
+  * ``"pallas_interpret"`` / ``"pallas_lean_interpret"`` — the same kernel
+                             bodies interpreted on CPU (validation; the
+                             parity harness runs every variant this way).
 """
 
 from __future__ import annotations

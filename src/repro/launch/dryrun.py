@@ -157,14 +157,16 @@ def build_cell(arch_name: str, shape_name: str, mesh, *, remat=True, fsdp=True,
 def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
              force: bool = False, remat: bool = True, fsdp: bool = True,
              seq_shard: bool = True, tag: str = "", spec_name: str = "tpu-v5e",
-             little_spec: str = "") -> dict:
+             little_spec: str = "", backend: str = "auto") -> dict:
     mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
-    # Non-default specs get their own cell files — otherwise a --spec run
-    # would silently return records lowered under a different context.
+    # Non-default specs/backends get their own cell files — otherwise a
+    # --spec/--backend run would silently return records lowered under a
+    # different context.
     cell_id = (
         f"{arch_name}__{shape_name}__{mesh_tag}"
         + (f"__{spec_name}" if spec_name != "tpu-v5e" else "")
         + (f"__mixed-{little_spec}" if little_spec else "")
+        + (f"__{backend}" if backend != "auto" else "")
         + (f"__{tag}" if tag else "")
     )
     path = os.path.join(out_dir, cell_id + ".json")
@@ -203,6 +205,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
                     DeviceClass("little", spec=get_spec(little_spec),
                                 rel_throughput=0.35),
                 ],
+                backend=backend,
             )
 
         t0 = time.time()
@@ -212,7 +215,7 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
         # auto backend, exactly the bare defaults).  With --little-spec the
         # cell fn itself is class-sharded (each pod under its own tree) and
         # this outer context only covers math outside the shard_map.
-        exec_ctx = X.default_context(spec=get_spec(spec_name))
+        exec_ctx = X.default_context(spec=get_spec(spec_name), backend=backend)
         with exec_ctx:
             fn, args, in_sh, out_sh = build_cell(
                 arch_name, shape_name, mesh, remat=remat, fsdp=fsdp,
@@ -240,9 +243,10 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool, out_dir: str,
         rec.update(
             ok=True,
             device_class=exec_ctx.device_class,
+            exec_backend=exec_ctx.backend(),
             class_sharded=bool(asym is not None),
             shard_classes=(
-                [(p.pod, p.device_class, p.block_source)
+                [(p.pod, p.device_class, p.block_source, p.backend)
                  for p in getattr(fn, "provenance", [])]
                 if asym is not None else None
             ),
@@ -299,6 +303,14 @@ def main():
                          "intra-pod devices replicate their pod's program — "
                          "the record shows the mixed program structure, not "
                          "per-device memory at production intra-pod sharding")
+    from repro.core.execution import BACKEND_NAMES
+
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto"] + sorted(BACKEND_NAMES),
+                    help="micro-kernel dispatch entry the cells lower with "
+                         "(e.g. pallas_lean for the VMEM-lean variant; auto "
+                         "probes the platform — xla off-TPU).  Pallas "
+                         "backends only compile on TPU hosts")
     ap.add_argument("--tag", default="")
     ap.add_argument("--out", default="artifacts/dryrun")
     args = ap.parse_args()
@@ -328,6 +340,7 @@ def main():
                     tag=args.tag,
                     spec_name=args.spec,
                     little_spec=args.little_spec,
+                    backend=args.backend,
                 )
                 if rec.get("skipped"):
                     n_skip += 1

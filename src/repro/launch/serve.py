@@ -145,9 +145,14 @@ def main():
         out_padded = generate(cfg, params, jnp.asarray(padded), args.gen_len,
                               seq_cap, decode=jax.jit(step))
         out = out_padded[order]
-        shard_classes = [(p.pod, p.device_class, p.block_source)
+        shard_classes = [(p.pod, p.device_class, p.block_source, p.backend)
                          for p in step.provenance]
-        device_class, exec_backend = "mixed", step.provenance[0].backend
+        # A mixed step may run a different micro-kernel variant per class
+        # (big -> pallas, little -> pallas_lean): report every variant.
+        device_class = "mixed"
+        exec_backend = "+".join(
+            sorted({p.backend for p in step.provenance})
+        )
     else:
         # Every decode matmul runs under the serving class's control tree —
         # the context is active while the decode fn traces (first call).

@@ -103,7 +103,7 @@ def main():
     history = trainer.run()
     dt = time.time() - t0
     shard_classes = (
-        [(p.pod, p.device_class, p.block_source)
+        [(p.pod, p.device_class, p.block_source, p.backend)
          for p in trainer.class_sharded_step.provenance]
         if trainer.class_sharded_step is not None
         else None

@@ -19,12 +19,21 @@ derivation):
         "tpu-v5e/bfloat16/512x512x512": {
           "bm": 512, "bk": 512, "bn": 512,
           "dtype_bytes": 2, "acc_bytes": 4,
-          "backend": "cost-model",
+          "backend": "pallas",
+          "measured_with": "cost-model",
           "time_s": 1.4e-3, "analytical_time_s": 1.5e-3,
           "shape": [512, 512, 512]
         }
       }
     }
+
+``"backend"`` records the winning micro-kernel *variant* (a key of
+``repro.core.execution.BACKENDS`` — e.g. ``"pallas"`` or the VMEM-lean
+``"pallas_lean"``); ``"measured_with"`` records the scorer that picked it
+(``"cost-model"``/``"wallclock"``).  Caches written before the variant
+search stored the scorer under ``"backend"`` — consumers treat any value
+outside the dispatch table as "no variant recorded", so old caches keep
+working with the default kernel.
 
 Writes are atomic (tempfile + ``os.replace``) so a crashed tuner never
 leaves a torn cache for a training job to read.
@@ -241,6 +250,33 @@ def cached_block_config(
     return cfg
 
 
+def cached_kernel_backend(
+    m: int,
+    k: int,
+    n: int,
+    dtype_name: str,
+    *,
+    spec_name: Optional[str] = None,
+) -> Optional[str]:
+    """The raw ``"backend"`` field of the active cache entry, or None.
+
+    Returns the string as stored — callers validate it against
+    ``execution.BACKENDS`` (pre-variant caches stored the measurement
+    backend here; an unknown value means "no variant recorded").
+    """
+
+    cache = active_cache()
+    if cache is None:
+        return None
+    if spec_name is None:
+        spec_name = os.environ.get(ENV_SPEC_VAR, TPU_V5E.name)
+    entry = cache.entries.get(shape_bucket_key(spec_name, dtype_name, m, k, n))
+    if entry is None:
+        return None
+    backend = entry.get("backend")
+    return backend if isinstance(backend, str) else None
+
+
 __all__ = [
     "CACHE_VERSION",
     "ENV_VAR",
@@ -249,4 +285,5 @@ __all__ = [
     "shape_bucket_key",
     "active_cache",
     "cached_block_config",
+    "cached_kernel_backend",
 ]

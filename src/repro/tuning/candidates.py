@@ -49,10 +49,17 @@ def analytical_config(
     *,
     spec: TpuCoreSpec = TPU_V5E,
     dtype_bytes: int = 2,
+    double_buffer: bool = True,
 ) -> BlockConfig:
-    """The model-derived default (the search's baseline and seed)."""
+    """The model-derived default (the search's baseline and seed).
 
-    return derive_block_config(m, k, n, spec=spec, dtype_bytes=dtype_bytes)
+    ``double_buffer=False`` seeds the VMEM-lean kernel's search: the
+    single-buffer working-set model admits larger panels.
+    """
+
+    return derive_block_config(
+        m, k, n, spec=spec, dtype_bytes=dtype_bytes, double_buffer=double_buffer
+    )
 
 
 def _axis_values(problem_dim: int, cap: int, align: int) -> list[int]:
@@ -70,12 +77,13 @@ def _axis_values(problem_dim: int, cap: int, align: int) -> list[int]:
 
 
 def neighborhood(
-    cfg: BlockConfig, *, spec: TpuCoreSpec = TPU_V5E
+    cfg: BlockConfig, *, spec: TpuCoreSpec = TPU_V5E, double_buffer: bool = True
 ) -> list[BlockConfig]:
     """One-step refinements around ``cfg`` (the paper's fine sweep).
 
     Perturbs each dimension by ±1 alignment step and ±2x, keeping only
-    feasible (aligned, VMEM-fitting) results.
+    feasible (aligned, VMEM-fitting under the given buffering model)
+    results.
     """
 
     align = spec.mxu
@@ -86,7 +94,7 @@ def neighborhood(
             if nxt < align or nxt % align:
                 continue
             cand = dataclasses.replace(cfg, **{dim: nxt})
-            if cand.fits(spec):
+            if cand.fits(spec, double_buffer=double_buffer):
                 out.append(cand)
     return out
 
@@ -102,28 +110,32 @@ def enumerate_candidates(
     max_bk: int = 2048,
     max_bn: int = 1024,
     extra: Optional[Iterable[BlockConfig]] = None,
+    double_buffer: bool = True,
 ) -> list[BlockConfig]:
     """The deduplicated feasible candidate set for one GEMM shape.
 
     Every returned config is MXU-aligned in all three dims and fits the
-    VMEM budget (``cfg.fits(spec)``); the analytical optimum and its
-    neighborhood are always included.  Deterministic order: analytical
-    first, then ascending ``(bm, bk, bn)``.
+    VMEM budget under the requested buffering model (``cfg.fits(spec,
+    double_buffer=...)``); the analytical optimum and its neighborhood are
+    always included.  Deterministic order: analytical first, then
+    ascending ``(bm, bk, bn)``.
     """
 
     align = spec.mxu
-    seed = analytical_config(m, k, n, spec=spec, dtype_bytes=dtype_bytes)
+    seed = analytical_config(
+        m, k, n, spec=spec, dtype_bytes=dtype_bytes, double_buffer=double_buffer
+    )
 
     pool: list[BlockConfig] = [seed]
-    pool += neighborhood(seed, spec=spec)
+    pool += neighborhood(seed, spec=spec, double_buffer=double_buffer)
     for bm in _axis_values(m, max_bm, align):
         for bn in _axis_values(n, max_bn, align):
             for bk in _axis_values(k, max_bk, align):
                 cand = BlockConfig(bm=bm, bk=bk, bn=bn, dtype_bytes=dtype_bytes)
-                if cand.fits(spec):
+                if cand.fits(spec, double_buffer=double_buffer):
                     pool.append(cand)
     if extra:
-        pool += [c for c in extra if c.fits(spec)]
+        pool += [c for c in extra if c.fits(spec, double_buffer=double_buffer)]
 
     seen: set[tuple[int, int, int]] = set()
     out: list[BlockConfig] = []
@@ -138,10 +150,109 @@ def enumerate_candidates(
     return out
 
 
+# ---------------------------------------------------------------------------
+# Micro-kernel variants as a search dimension (paper §5.3)
+# ---------------------------------------------------------------------------
+
+# The kernel variants the search enumerates by default: every entry of
+# the variant registry (the pipelined default plus the VMEM-lean
+# k-streaming kernel).  Interpret twins and "xla" are execution modes /
+# dispatch entries, not separate search points — neither the cost model
+# nor the wallclock timer can model them as kernels.
+def _kernel_backends() -> tuple[str, ...]:
+    from repro.kernels.gemm import GEMM_KERNELS
+
+    return tuple(GEMM_KERNELS)
+
+
+KERNEL_BACKENDS: tuple[str, ...] = _kernel_backends()
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCandidate:
+    """One search point: a block config *and* the kernel variant to run it.
+
+    The lean variant's single-buffered working set admits (bm, bn) panels
+    the pipelined kernel cannot hold — the variant dimension genuinely
+    widens the feasible set, it is not a relabeling.
+    """
+
+    cfg: BlockConfig
+    backend: str = "pallas"
+
+    @property
+    def key(self) -> tuple[int, int, int, str]:
+        return (self.cfg.bm, self.cfg.bk, self.cfg.bn, self.backend)
+
+
+def enumerate_kernel_candidates(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    spec: TpuCoreSpec = TPU_V5E,
+    dtype_bytes: int = 2,
+    backends: Iterable[str] = KERNEL_BACKENDS,
+    **kwargs,
+) -> list[KernelCandidate]:
+    """The (config, variant) candidate set for one GEMM shape.
+
+    Per variant, configs are enumerated under *that kernel's* VMEM model
+    (double-buffered for ``"pallas"``, single-buffered for
+    ``"pallas_lean"``); duplicates of (bm, bk, bn, backend) are dropped.
+    Order: each variant's analytical seed first (default variant leading),
+    then the merged grids.
+    """
+
+    from repro.core.execution import backend_double_buffers
+    from repro.kernels.gemm import GEMM_KERNELS
+
+    backends = list(backends)
+    for b in backends:
+        # Validate against the *kernel* registry, not the dispatch table:
+        # "xla" and the interpret twins are not timeable search variants.
+        if b not in GEMM_KERNELS:
+            raise ValueError(
+                f"unknown kernel backend {b!r}; searchable variants: "
+                f"{sorted(GEMM_KERNELS)}"
+            )
+    out: list[KernelCandidate] = []
+    seen: set[tuple[int, int, int, str]] = set()
+    per_backend = [
+        (
+            b,
+            enumerate_candidates(
+                m, k, n,
+                spec=spec,
+                dtype_bytes=dtype_bytes,
+                double_buffer=backend_double_buffers(b),
+                **kwargs,
+            ),
+        )
+        for b in backends
+    ]
+    # Seeds first (search_shape treats candidate #0 as the baseline).
+    for b, cands in per_backend:
+        cand = KernelCandidate(cfg=cands[0], backend=b)
+        if cand.key not in seen:
+            seen.add(cand.key)
+            out.append(cand)
+    for b, cands in per_backend:
+        for cfg in cands[1:]:
+            cand = KernelCandidate(cfg=cfg, backend=b)
+            if cand.key not in seen:
+                seen.add(cand.key)
+                out.append(cand)
+    return out
+
+
 __all__ = [
+    "KERNEL_BACKENDS",
     "SPECS",
+    "KernelCandidate",
     "get_spec",
     "analytical_config",
     "neighborhood",
     "enumerate_candidates",
+    "enumerate_kernel_candidates",
 ]

@@ -16,6 +16,12 @@ The cost model deliberately charges what the analytical derivation cannot
 see: padding waste on ragged shapes (a block bigger than the problem pays
 for zeros) and grid-step overhead (too-small blocks launch thousands of
 steps) — the two effects the paper's empirical search exists to capture.
+
+Both backends take the micro-kernel variant (``kernel_backend``) as a
+scoring dimension: the pipelined default overlaps the HBM streams with
+the MXU (``max(compute, memory)``), while the VMEM-lean single-buffered
+kernel serializes them (``compute + memory``) in exchange for fitting
+larger panels — the §5.3 per-class trade the search now weighs.
 """
 
 from __future__ import annotations
@@ -24,6 +30,7 @@ import dataclasses
 from typing import Callable, Optional
 
 from repro.core.blocking import TPU_V5E, BlockConfig, TpuCoreSpec, pad_to_blocks
+from repro.core.execution import backend_double_buffers
 
 # Fixed cost per grid step (DMA issue + pipeline bubble).  Order of
 # magnitude from TPU kernel practice; the precise value only needs to rank
@@ -33,19 +40,28 @@ GRID_STEP_OVERHEAD_S = 1e-6
 
 @dataclasses.dataclass(frozen=True)
 class CostBreakdown:
-    """Roofline terms for one (shape, config) cell — mirrors RooflineRow."""
+    """Roofline terms for one (shape, config, variant) cell."""
 
     cfg: BlockConfig
     compute_s: float
     memory_s: float
     overhead_s: float
     grid: tuple[int, int, int]
+    # Micro-kernel variant the estimate models; decides stream overlap.
+    kernel_backend: str = "pallas"
 
     @property
     def time_s(self) -> float:
-        """Lower-bound step time: compute/memory overlapped, overhead not."""
+        """Step-time lower bound.
 
-        return max(self.compute_s, self.memory_s) + self.overhead_s
+        The pipelined kernel double-buffers, so HBM traffic hides under
+        the MXU (``max``); the lean kernel single-buffers, so each K step
+        waits for its DMA before computing (``sum``).
+        """
+
+        if backend_double_buffers(self.kernel_backend):
+            return max(self.compute_s, self.memory_s) + self.overhead_s
+        return self.compute_s + self.memory_s + self.overhead_s
 
     @property
     def bottleneck(self) -> str:
@@ -59,13 +75,17 @@ def cost_breakdown(
     cfg: BlockConfig,
     *,
     spec: TpuCoreSpec = TPU_V5E,
+    kernel_backend: str = "pallas",
 ) -> CostBreakdown:
     """Deterministic roofline estimate of one blocked-GEMM invocation.
 
-    Traffic model matches the Pallas grid of ``kernels/gemm.py``: at grid
-    point (i, j, kk) an ``(bm, bk)`` A-block and ``(bk, bn)`` B-block are
+    Traffic model matches the Pallas grids of ``kernels/gemm.py``: per
+    (i, j, kk) step an ``(bm, bk)`` A-block and ``(bk, bn)`` B-block are
     staged HBM->VMEM, so A is re-read once per j column and B once per i
-    row; the fp32 accumulator lives in VMEM and C is written once.
+    row; the fp32 accumulator lives in VMEM and C is written once.  (The
+    lean kernel walks the same (i, j, kk) space — its inner fori_loop
+    issues the same per-step DMAs, so the traffic and overhead terms are
+    shared; only the overlap differs, see :class:`CostBreakdown`.)
     Compute covers the *padded* problem — padding waste is charged.
     """
 
@@ -82,6 +102,7 @@ def cost_breakdown(
         memory_s=(a_bytes + b_bytes + c_bytes) / spec.hbm_bw,
         overhead_s=gm * gn * gk * GRID_STEP_OVERHEAD_S,
         grid=(gm, gn, gk),
+        kernel_backend=kernel_backend,
     )
 
 
@@ -92,10 +113,13 @@ def cost_model_time(
     cfg: BlockConfig,
     *,
     spec: TpuCoreSpec = TPU_V5E,
+    kernel_backend: str = "pallas",
 ) -> float:
     """Scalar objective (seconds) of the cost-model backend."""
 
-    return cost_breakdown(m, k, n, cfg, spec=spec).time_s
+    return cost_breakdown(
+        m, k, n, cfg, spec=spec, kernel_backend=kernel_backend
+    ).time_s
 
 
 def wallclock_time(
@@ -108,11 +132,13 @@ def wallclock_time(
     interpret: Optional[bool] = None,
     reps: int = 3,
     warmup: int = 1,
+    kernel_backend: str = "pallas",
 ) -> float:
     """Median wall seconds of the real Pallas kernel on this host.
 
     ``interpret`` defaults to True off-TPU (the validation path) and False
-    on TPU (the Mosaic-compiled perf path).
+    on TPU (the Mosaic-compiled perf path).  ``kernel_backend`` selects
+    the micro-kernel variant being timed (``"pallas"``/``"pallas_lean"``).
     """
 
     import time
@@ -121,8 +147,15 @@ def wallclock_time(
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.kernels.gemm import gemm_pallas
+    from repro.kernels.gemm import GEMM_KERNELS
 
+    try:
+        kernel = GEMM_KERNELS[kernel_backend]
+    except KeyError:
+        raise ValueError(
+            f"wallclock cannot time kernel backend {kernel_backend!r}; "
+            f"known: {sorted(GEMM_KERNELS)}"
+        ) from None
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     dtype = dtype or (jnp.bfloat16 if cfg.dtype_bytes == 2 else jnp.float32)
@@ -131,7 +164,7 @@ def wallclock_time(
     b = jnp.asarray(rng.normal(size=(k, n)), dtype)
 
     def call():
-        return jax.block_until_ready(gemm_pallas(a, b, cfg, interpret=interpret))
+        return jax.block_until_ready(kernel(a, b, cfg, interpret=interpret))
 
     for _ in range(warmup):
         call()
@@ -149,13 +182,22 @@ def make_backend(
     *,
     spec: TpuCoreSpec = TPU_V5E,
     dtype=None,
-) -> Callable[[int, int, int, BlockConfig], float]:
-    """Resolve a backend name to a ``(m, k, n, cfg) -> seconds`` scorer."""
+) -> Callable[..., float]:
+    """Resolve a backend name to a ``(m, k, n, cfg) -> seconds`` scorer.
+
+    Scorers also accept ``kernel_backend=`` (the micro-kernel variant
+    being scored; default ``"pallas"``) — the search passes it when the
+    variant dimension is enabled.
+    """
 
     if name == "cost-model":
-        return lambda m, k, n, cfg: cost_model_time(m, k, n, cfg, spec=spec)
+        return lambda m, k, n, cfg, kernel_backend="pallas": cost_model_time(
+            m, k, n, cfg, spec=spec, kernel_backend=kernel_backend
+        )
     if name == "wallclock":
-        return lambda m, k, n, cfg: wallclock_time(m, k, n, cfg, dtype=dtype)
+        return lambda m, k, n, cfg, kernel_backend="pallas": wallclock_time(
+            m, k, n, cfg, dtype=dtype, kernel_backend=kernel_backend
+        )
     raise ValueError(f"unknown measure backend {name!r} (cost-model|wallclock)")
 
 

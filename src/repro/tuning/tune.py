@@ -59,6 +59,9 @@ class SearchResult:
     n_candidates: int          # candidates actually scored by `backend`
     cache_hit: bool = False
     n_pruned: int = 0          # candidates dropped by the cost-model prefilter
+    # Micro-kernel variant the winner runs on (a BACKENDS key): the §5.3
+    # search dimension — "pallas" (pipelined) or "pallas_lean".
+    best_backend: str = "pallas"
 
     @property
     def speedup(self) -> float:
@@ -76,6 +79,7 @@ def search_shape(
     max_candidates: Optional[int] = None,
     prefilter=None,
     coarse_keep: int = 8,
+    kernel_backends: Sequence[str] = ("pallas",),
 ) -> SearchResult:
     """Score candidates; the analytical config is always candidate #0,
     so the winner's time is <= the analytical default's by construction.
@@ -87,54 +91,84 @@ def search_shape(
     the timed winner's one-step neighborhood is then refined with
     ``backend`` as well.  This is what makes wallclock search affordable:
     the expensive timer runs on tens of candidates, not hundreds.
+
+    ``kernel_backends`` enumerates micro-kernel variants as a search
+    dimension (each config feasibility-checked under *its* variant's VMEM
+    model).  With the default single ``("pallas",)`` the scorer is called
+    ``backend(m, k, n, cfg)`` exactly as before; with variants enabled it
+    must also accept ``kernel_backend=`` (``measure.make_backend`` scorers
+    do).
     """
 
-    cands = CAND.enumerate_candidates(m, k, n, spec=spec, dtype_bytes=dtype_bytes)
+    kernel_backends = tuple(kernel_backends)
+    multi = kernel_backends != ("pallas",)
+    if multi:
+        cands = CAND.enumerate_kernel_candidates(
+            m, k, n, spec=spec, dtype_bytes=dtype_bytes, backends=kernel_backends
+        )
+    else:
+        cands = [
+            CAND.KernelCandidate(cfg)
+            for cfg in CAND.enumerate_candidates(
+                m, k, n, spec=spec, dtype_bytes=dtype_bytes
+            )
+        ]
     if max_candidates is not None and len(cands) > max_candidates:
         # Keep the analytical seed, truncate the tail of the coarse grid.
         cands = cands[:max_candidates]
     analytical = cands[0]
 
+    def _score(fn, cand: CAND.KernelCandidate) -> float:
+        if multi:
+            return fn(m, k, n, cand.cfg, kernel_backend=cand.backend)
+        return fn(m, k, n, cand.cfg)
+
     n_pruned = 0
     if prefilter is not None and len(cands) > coarse_keep + 1:
         # Coarse stage: rank by the cheap model, keep the best region.
-        ranked = sorted(cands[1:], key=lambda c: prefilter(m, k, n, c))
+        ranked = sorted(cands[1:], key=lambda c: _score(prefilter, c))
         kept = [analytical] + ranked[:coarse_keep]
         n_pruned = len(cands) - len(kept)
         cands = kept
 
     best, best_t, ana_t = None, float("inf"), None
-    timed: set[tuple[int, int, int]] = set()
-    for cfg in cands:
-        t = backend(m, k, n, cfg)
-        timed.add((cfg.bm, cfg.bk, cfg.bn))
-        if cfg == analytical:
+    timed: set[tuple[int, int, int, str]] = set()
+    for cand in cands:
+        t = _score(backend, cand)
+        timed.add(cand.key)
+        if cand == analytical:
             ana_t = t
         if t < best_t:
-            best, best_t = cfg, t
+            best, best_t = cand, t
     assert best is not None and ana_t is not None
 
     if prefilter is not None and n_pruned:
-        # Fine stage: refine around the coarse winner (paper Figure 4).
-        # Skipped when the coarse stage pruned nothing — the candidate
-        # grid was already timed exhaustively.
-        for cfg in CAND.neighborhood(best, spec=spec):
-            key = (cfg.bm, cfg.bk, cfg.bn)
-            if key in timed:
+        # Fine stage: refine around the coarse winner (paper Figure 4),
+        # staying on the winner's kernel variant.  Skipped when the coarse
+        # stage pruned nothing — the grid was already timed exhaustively.
+        from repro.core.execution import backend_double_buffers
+
+        for cfg in CAND.neighborhood(
+            best.cfg, spec=spec,
+            double_buffer=backend_double_buffers(best.backend),
+        ):
+            cand = CAND.KernelCandidate(cfg=cfg, backend=best.backend)
+            if cand.key in timed:
                 continue
-            t = backend(m, k, n, cfg)
-            timed.add(key)
+            t = _score(backend, cand)
+            timed.add(cand.key)
             if t < best_t:
-                best, best_t = cfg, t
+                best, best_t = cand, t
 
     return SearchResult(
         shape=(m, k, n),
-        best=best,
+        best=best.cfg,
         best_time_s=best_t,
-        analytical=analytical,
+        analytical=analytical.cfg,
         analytical_time_s=ana_t,
         n_candidates=len(timed),
         n_pruned=n_pruned,
+        best_backend=best.backend,
     )
 
 
@@ -166,12 +200,17 @@ def tune_shapes(
     max_candidates: Optional[int] = None,
     two_stage: Optional[bool] = None,
     coarse_keep: int = 8,
+    kernel_backends: Sequence[str] = CAND.KERNEL_BACKENDS,
 ) -> list[SearchResult]:
     """Library entry point: search ``shapes``, updating ``cache`` in place.
 
     ``two_stage=None`` (auto) enables the cost-model prefilter exactly when
     the scoring backend is wallclock — the cost model pruning itself would
     be circular.  Pass True/False to force either way.
+
+    The micro-kernel variant is a search dimension by default
+    (``kernel_backends``); the cache entry records the winner under
+    ``"backend"`` and the scorer under ``"measured_with"``.
     """
 
     dtype_name, dtype_bytes = DTYPES[dtype]
@@ -179,7 +218,11 @@ def tune_shapes(
     if two_stage is None:
         two_stage = backend_name == "wallclock"
     prefilter = (
-        (lambda m, k, n, cfg: M.cost_model_time(m, k, n, cfg, spec=spec))
+        (
+            lambda m, k, n, cfg, kernel_backend="pallas": M.cost_model_time(
+                m, k, n, cfg, spec=spec, kernel_backend=kernel_backend
+            )
+        )
         if two_stage
         else None
     )
@@ -196,8 +239,15 @@ def tune_shapes(
             entry = cache.entries.get(key, {})
             best_t = entry.get("time_s")
             ana_t = entry.get("analytical_time_s")
+            recorded = entry.get("backend")
+            from repro.kernels.gemm import GEMM_KERNELS
+
+            # Guard against pre-variant caches (scorer names) AND against
+            # dispatch entries the timers cannot model ("xla", interpret
+            # twins): only a registered kernel variant is reported.
+            best_backend = recorded if recorded in GEMM_KERNELS else "pallas"
             if best_t is None or ana_t is None:
-                best_t = backend(m, k, n, cached)
+                best_t = backend(m, k, n, cached, kernel_backend=best_backend)
                 ana_t = backend(m, k, n, ana)
             results.append(
                 SearchResult(
@@ -208,6 +258,7 @@ def tune_shapes(
                     analytical_time_s=float(ana_t),
                     n_candidates=0,
                     cache_hit=True,
+                    best_backend=best_backend,
                 )
             )
             continue
@@ -220,12 +271,14 @@ def tune_shapes(
             max_candidates=max_candidates,
             prefilter=prefilter,
             coarse_keep=coarse_keep,
+            kernel_backends=kernel_backends,
         )
         log.info(
-            "tuned %dx%dx%d: best=(%d,%d,%d) %.3es vs analytical=(%d,%d,%d) "
+            "tuned %dx%dx%d: best=(%d,%d,%d)@%s %.3es vs analytical=(%d,%d,%d) "
             "%.3es (%.2fx, %d timed, %d pruned, %.1fs search)",
             m, k, n,
-            res.best.bm, res.best.bk, res.best.bn, res.best_time_s,
+            res.best.bm, res.best.bk, res.best.bn, res.best_backend,
+            res.best_time_s,
             res.analytical.bm, res.analytical.bk, res.analytical.bn,
             res.analytical_time_s, res.speedup, res.n_candidates, res.n_pruned,
             time.perf_counter() - t0,
@@ -233,7 +286,8 @@ def tune_shapes(
         if cache is not None:
             cache.put(
                 spec.name, dtype_name, m, k, n, res.best,
-                backend=backend_name,
+                backend=res.best_backend,
+                measured_with=backend_name,
                 time_s=res.best_time_s,
                 analytical_time_s=res.analytical_time_s,
             )
@@ -250,6 +304,12 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     ap.add_argument("--shapes", default=None, help="comma-separated MxKxN list")
     ap.add_argument("--dtype", default="bf16", choices=sorted(DTYPES))
     ap.add_argument("--backend", default="cost-model", choices=["cost-model", "wallclock"])
+    ap.add_argument(
+        "--kernel-backends", default=",".join(CAND.KERNEL_BACKENDS),
+        help="comma-separated micro-kernel variants to search (e.g. "
+             "'pallas,pallas_lean', or a single 'pallas_lean' to force the "
+             "VMEM-lean kernel); the cache entry records the winner",
+    )
     ap.add_argument("--cache", default=None, help="cache file (default: $REPRO_TUNING_CACHE or artifacts/tuning/cache.json)")
     ap.add_argument("--force", action="store_true", help="re-search cached shapes")
     ap.add_argument("--max-candidates", type=int, default=None)
@@ -277,6 +337,10 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
     )
     cache = C.TuningCache.load(cache_path)
 
+    kernel_backends = [b.strip() for b in args.kernel_backends.split(",") if b.strip()]
+    if not kernel_backends:
+        ap.error("--kernel-backends needs at least one variant")
+
     results = tune_shapes(
         shapes,
         spec=spec,
@@ -287,6 +351,7 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
         max_candidates=args.max_candidates,
         two_stage={"auto": None, "on": True, "off": False}[args.two_stage],
         coarse_keep=args.coarse_keep,
+        kernel_backends=kernel_backends,
     )
 
     summary: dict = {
@@ -298,6 +363,7 @@ def main(argv: Optional[Sequence[str]] = None) -> dict:
             {
                 "shape": list(r.shape),
                 "best": [r.best.bm, r.best.bk, r.best.bn],
+                "best_backend": r.best_backend,
                 "best_time_s": r.best_time_s,
                 "analytical": [r.analytical.bm, r.analytical.bk, r.analytical.bn],
                 "analytical_time_s": r.analytical_time_s,

@@ -1,0 +1,177 @@
+"""Cross-backend kernel parity harness.
+
+Every entry of ``execution.BACKENDS`` — present and future — is run
+against the pure-jnp oracle (``kernels/ref.gemm_ref``) over a grid of
+shapes (ragged, non-multiple-of-block, 1-row/1-col edges) and dtypes
+(f32, bf16), with per-dtype tolerances.  The parametrization iterates the
+dispatch table itself, so **adding a backend automatically adds its
+parity coverage**: a new entry that lacks an interpret twin (the CPU
+route, ``execution.INTERPRET_TWIN``) fails ``test_every_backend_has_a_
+cpu_route`` before it can ship untested.
+
+Pallas variants execute through their interpret twins (the kernel *body*
+is identical; Mosaic compilation is the only thing interpret mode skips),
+which is how this suite runs on the CPU-only CI host.  A hypothesis sweep
+(marked ``slow``; the CI parity lane raises its example count via
+``$REPRO_PARITY_EXAMPLES``) fuzzes shapes and block configs beyond the
+fixed grid.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import execution as X
+from repro.core.blocking import TPU_V5E, BlockConfig, derive_block_config
+from repro.kernels import ref
+
+RNG = np.random.default_rng(11)
+
+# Ragged, non-multiple-of-block, and degenerate 1-row/1-col problems.
+SHAPES = [
+    (128, 128, 128),     # exact single block
+    (256, 512, 128),     # multi-block, exact
+    (300, 200, 180),     # ragged in all dims
+    (64, 1024, 96),      # sub-block m/n, long k
+    (1, 384, 128),       # 1-row edge
+    (128, 256, 1),       # 1-col edge
+    (1, 128, 1),         # 1x1 output
+    (257, 129, 131),     # off-by-one past block boundaries
+]
+
+# allclose tolerance per accumulation dtype: fp32 accumulators everywhere,
+# but bf16 operands quantize the inputs.
+TOLS = {jnp.float32: dict(rtol=1e-4, atol=1e-4), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+DTYPES = sorted(TOLS, key=str)
+
+
+def _rand(shape, dtype):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+def _run_backend(backend, a, b, cfg):
+    """Dispatch through the table via the backend's CPU-runnable twin."""
+
+    return X.BACKENDS[X.interpret_twin(backend)](a, b, cfg, a.dtype)
+
+
+def test_every_backend_has_a_cpu_route():
+    """The growth guard: a BACKENDS entry without a registered interpret
+    twin cannot be parity-tested and must not exist."""
+
+    for name in X.BACKENDS:
+        twin = X.interpret_twin(name)  # raises on a missing registration
+        assert twin in X.BACKENDS
+    # And the twin map carries no stale names for removed backends.
+    assert set(X.INTERPRET_TWIN) == set(X.BACKENDS)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+@pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
+@pytest.mark.parametrize("backend", sorted(X.BACKENDS))
+def test_backend_matches_oracle(backend, shape, dtype):
+    m, k, n = shape
+    a, b = _rand((m, k), dtype), _rand((k, n), dtype)
+    # A fixed single-tile config exercises the padding paths on every
+    # ragged/edge shape; XLA ignores it.
+    cfg = BlockConfig(bm=128, bk=128, bn=128, dtype_bytes=a.dtype.itemsize)
+    out = _run_backend(backend, a, b, cfg)
+    expect = ref.gemm_ref(a, b)
+    assert out.shape == expect.shape and out.dtype == expect.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOLS[dtype]
+    )
+
+
+@pytest.mark.parametrize("backend", sorted(X.BACKENDS))
+def test_backend_default_config_resolution(backend):
+    """cfg=None resolves per backend (lean derives single-buffered) and
+    still matches the oracle."""
+
+    a, b = _rand((130, 70), jnp.float32), _rand((70, 50), jnp.float32)
+    out = X.BACKENDS[X.interpret_twin(backend)](a, b, None, a.dtype)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.gemm_ref(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweep (the CI parity lane: pytest -m slow tests/test_backend_parity.py)
+# ---------------------------------------------------------------------------
+
+# Only the fuzz sweep needs hypothesis; the fixed grid above must keep
+# running without it (so no module-level importorskip).
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is an optional dep
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _EXAMPLES = int(os.environ.get("REPRO_PARITY_EXAMPLES", "10"))
+
+    dims = st.integers(min_value=1, max_value=300)
+    blocks = st.sampled_from([64, 128, 256])
+
+    @pytest.mark.slow
+    @settings(
+        max_examples=_EXAMPLES,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(m=dims, k=dims, n=dims, bm=blocks, bk=blocks, bn=blocks, data=st.data())
+    def test_backend_parity_fuzz(m, k, n, bm, bk, bn, data):
+        """Random (shape, block, backend, dtype): every backend agrees
+        with the oracle whenever the config passes shape validation."""
+
+        backend = data.draw(st.sampled_from(sorted(X.BACKENDS)), label="backend")
+        dtype = data.draw(st.sampled_from(DTYPES), label="dtype")
+        # Deterministic data per drawn example (hypothesis replays shrink
+        # candidates; a shared advancing RNG would make failures flaky).
+        rng = np.random.default_rng(m * 7919 + k * 104729 + n)
+        a = jnp.asarray(rng.normal(size=(m, k)), dtype)
+        b = jnp.asarray(rng.normal(size=(k, n)), dtype)
+        cfg = BlockConfig(bm=bm, bk=bk, bn=bn, dtype_bytes=a.dtype.itemsize)
+        from repro.kernels.gemm import validate_block_config
+
+        try:
+            validate_block_config(m, k, n, cfg)
+        except ValueError:
+            # Oversized blocks are a loud error by contract (the bugfix);
+            # parity only covers valid configs.
+            return
+        out = _run_backend(backend, a, b, cfg)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(ref.gemm_ref(a, b), np.float32),
+            **TOLS[dtype],
+        )
+
+    @pytest.mark.slow
+    @settings(max_examples=max(5, _EXAMPLES // 2), deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=600),
+        k=st.integers(min_value=1, max_value=600),
+        n=st.integers(min_value=1, max_value=600),
+    )
+    def test_lean_bitwise_matches_pipelined(m, k, n):
+        """The lean kernel is a *scheduling* change, not a numeric one:
+        same blocks, same accumulation order, bit-identical to the
+        default kernel."""
+
+        from repro.kernels.gemm import gemm_pallas, gemm_pallas_lean
+
+        rng = np.random.default_rng(m * 7919 + k * 104729 + n)
+        a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        cfg = derive_block_config(m, k, n, spec=TPU_V5E, dtype_bytes=4)
+        assert np.array_equal(
+            np.asarray(gemm_pallas(a, b, cfg, interpret=True)),
+            np.asarray(gemm_pallas_lean(a, b, cfg, interpret=True)),
+        )

@@ -41,20 +41,27 @@ def _pod_mesh(n=2):
     return make_host_mesh(pod=n)
 
 
-def _write_biglittle_cache(tmp_path, big_cfg, little_cfg, m, k, n):
+def _write_biglittle_cache(tmp_path, big_cfg, little_cfg, m, k, n,
+                           big_backend="test", little_backend="test"):
     """Per-class tuned entries under both dtype keys: bfloat16 so the mesh
     trees themselves resolve tuned (block_source provenance), float32 so
-    the f32 test calls re-resolve to the same shapes."""
+    the f32 test calls re-resolve to the same shapes.  The ``*_backend``
+    fields record a per-class micro-kernel variant ("test" is not a
+    BACKENDS key, so the default kernel applies — the pre-variant
+    behavior)."""
 
     import dataclasses
 
     path = str(tmp_path / "cache.json")
     cache = C.TuningCache(path=path)
     for dtype_name, nbytes in (("bfloat16", 2), ("float32", 4)):
-        for spec, cfg in ((B.TPU_V5E, big_cfg), (B.TPU_LITTLE, little_cfg)):
+        for spec, cfg, backend in (
+            (B.TPU_V5E, big_cfg, big_backend),
+            (B.TPU_LITTLE, little_cfg, little_backend),
+        ):
             cache.put(spec.name, dtype_name, m, k, n,
                       dataclasses.replace(cfg, dtype_bytes=nbytes),
-                      backend="test")
+                      backend=backend)
     cache.save()
     return path
 
@@ -137,6 +144,125 @@ class TestPerShardRouting:
         )
         jax.jit(step)(_rand((2 * m, k)), _rand((k, n)))
         assert {c for c, _ in step.trace_log} == {"big", "little"}
+
+
+# ---------------------------------------------------------------------------
+# Per-shard micro-kernel variants (big -> pallas, little -> pallas_lean)
+# ---------------------------------------------------------------------------
+
+
+class TestPerShardVariantRouting:
+    def test_mixed_step_runs_two_kernel_variants(self, tmp_path, monkeypatch):
+        """One SPMD step, two micro-kernels: the cache records the lean
+        variant as little's winner, so the mixed step runs the big shard
+        through the pipelined kernel and the little shard through the
+        VMEM-lean k-streaming kernel — proven by ShardProvenance AND by
+        bit-equality of each shard with the explicit per-variant call."""
+
+        from repro.kernels.gemm import gemm_pallas_lean
+
+        m = k = n = 128
+        big_cfg = B.BlockConfig(bm=128, bk=128, bn=64, dtype_bytes=4)
+        little_cfg = B.BlockConfig(bm=64, bk=128, bn=128, dtype_bytes=4)
+        path = _write_biglittle_cache(
+            tmp_path, big_cfg, little_cfg, m, k, n,
+            big_backend="pallas", little_backend="pallas_lean",
+        )
+        monkeypatch.setenv(C.ENV_VAR, path)
+
+        am = AsymmetricMesh(
+            biglittle_classes(chips_per_pod=1),
+            tree_shape=(m, k, n), backend="pallas_interpret",
+        )
+        # The per-class trees name *different* dispatch-table entries,
+        # each mapped onto the interpret family this CPU host runs.
+        assert am.class_backends() == {
+            "big": "pallas_interpret",
+            "little": "pallas_lean_interpret",
+        }
+
+        step = am.class_sharded(
+            lambda x, w: gemm(x, w),
+            mesh=_pod_mesh(2), in_specs=(P("pod"), P()), out_specs=P("pod"),
+        )
+        assert step.mixed
+        assert [(p.pod, p.device_class, p.backend) for p in step.provenance] \
+            == [(0, "big", "pallas_interpret"),
+                (1, "little", "pallas_lean_interpret")]
+
+        x = _rand((2 * m, k))  # rows split pod-major: big [:m], little [m:]
+        w = _rand((k, n))
+        out = np.asarray(jax.jit(step)(x, w))
+
+        big_expect = np.asarray(gemm_pallas(x[:m], w, big_cfg, interpret=True))
+        little_expect = np.asarray(
+            gemm_pallas_lean(x[m:], w, little_cfg, interpret=True)
+        )
+        assert np.array_equal(out[:m], big_expect)
+        assert np.array_equal(out[m:], little_expect)
+        assert set(step.trace_log) == {("big", "tuned"), ("little", "tuned")}
+
+    def test_mixed_variant_step_bit_close_to_single_backend_run(
+        self, tmp_path, monkeypatch
+    ):
+        """The lean variant changes scheduling, not numerics: the mixed
+        two-variant step is bit-identical to the same step with every
+        shard on the default pipelined kernel."""
+
+        m = k = n = 128
+        big_cfg = B.BlockConfig(bm=128, bk=128, bn=64, dtype_bytes=4)
+        little_cfg = B.BlockConfig(bm=64, bk=128, bn=128, dtype_bytes=4)
+        x, w = _rand((2 * m, k)), _rand((k, n))
+
+        outs = {}
+        for tag, little_backend in (("mixed", "pallas_lean"), ("single", "pallas")):
+            path = _write_biglittle_cache(
+                tmp_path / tag, big_cfg, little_cfg, m, k, n,
+                big_backend="pallas", little_backend=little_backend,
+            )
+            monkeypatch.setenv(C.ENV_VAR, path)
+            am = AsymmetricMesh(
+                biglittle_classes(chips_per_pod=1),
+                tree_shape=(m, k, n), backend="pallas_interpret",
+            )
+            step = am.class_sharded(
+                lambda a, b: gemm(a, b),
+                mesh=_pod_mesh(2), in_specs=(P("pod"), P()), out_specs=P("pod"),
+            )
+            outs[tag] = np.asarray(jax.jit(step)(x, w))
+        assert np.array_equal(outs["mixed"], outs["single"])
+
+    def test_vmem_forced_lean_upgrade_no_cache(self, monkeypatch):
+        """Without any tuned entries, the §5.3 shared-B-panel constraint
+        itself forces little onto the lean kernel at big shapes: the lean
+        working set keeps a 4x larger bm than the pipelined shrink."""
+
+        monkeypatch.delenv(C.ENV_VAR, raising=False)
+        am = AsymmetricMesh(
+            biglittle_classes(chips_per_pod=1),
+            tree_shape=(2048, 2048, 2048), backend="pallas_interpret",
+        )
+        trees = am.control_trees()
+        assert am.class_backends() == {
+            "big": "pallas_interpret",
+            "little": "pallas_lean_interpret",
+        }
+        big, little = trees["big"], trees["little"]
+        assert little.block.bk == big.block.bk       # shared B panel
+        assert little.block.bm == 4 * 128            # lean keeps bm=512...
+        from repro.core.control_tree import _rederive_bm
+
+        pipelined = _rederive_bm(B.TPU_LITTLE, big.block, 2)
+        assert little.block.bm > pipelined.bm        # ...vs 128 pipelined
+        assert little.block.fits(B.TPU_LITTLE, double_buffer=False)
+        assert not little.block.fits(B.TPU_LITTLE)
+        # Provenance surfaces the variant per shard before any tracing.
+        step = am.class_sharded(
+            lambda a, b: gemm(a, b),
+            mesh=_pod_mesh(2), in_specs=(P("pod"), P()), out_specs=P("pod"),
+        )
+        assert [p.backend for p in step.provenance] \
+            == ["pallas_interpret", "pallas_lean_interpret"]
 
 
 # ---------------------------------------------------------------------------

@@ -115,11 +115,34 @@ class TestContextScoping:
         assert X.current_context() is None
 
     def test_backend_table_is_the_vocabulary(self):
-        assert set(X.BACKEND_NAMES) == {"xla", "pallas", "pallas_interpret"}
+        assert set(X.BACKEND_NAMES) == {
+            "xla",
+            "pallas",
+            "pallas_interpret",
+            "pallas_lean",
+            "pallas_lean_interpret",
+        }
         with pytest.raises(ValueError, match="unknown backend"):
             X.resolve_backend("mosaic")
         # auto resolves to a concrete table entry (xla on this CPU host).
         assert X.resolve_backend("auto") in X.BACKENDS
+        # Every table entry has a CPU-runnable interpret twin and a
+        # buffering model — the invariants the parity harness and the
+        # control trees rely on.
+        for name in X.BACKENDS:
+            assert X.interpret_twin(name) in X.BACKENDS
+            assert isinstance(X.backend_double_buffers(name), bool)
+        assert X.interpret_twin("pallas_lean") == "pallas_lean_interpret"
+        assert not X.backend_double_buffers("pallas_lean")
+        assert X.align_backend_family("pallas_lean", "pallas_interpret") \
+            == "pallas_lean_interpret"
+        assert X.align_backend_family("pallas_lean", "pallas") == "pallas_lean"
+        # The family mapping is symmetric (regression): an interpret name
+        # that leaked into a cache must come back compiled on a hardware
+        # tree, never run the Python interpreter silently.
+        assert X.align_backend_family("pallas_lean_interpret", "pallas") \
+            == "pallas_lean"
+        assert X.align_backend_family("pallas_interpret", "pallas") == "pallas"
 
 
 # ---------------------------------------------------------------------------
@@ -362,6 +385,26 @@ class TestTunedRouting:
         via_tree = gemm_with_tree(a, b, tree)
         explicit = gemm_pallas(a, b, custom, interpret=True)
         assert np.array_equal(np.asarray(via_tree), np.asarray(explicit))
+
+    def test_hand_built_tree_clamps_to_smaller_call_shapes(self):
+        # Regression: a hand-built tree applies to every call shape; a
+        # 512-row block reused for a 128-row matmul must clamp to the
+        # lane-padded call dims (pre-validation it silently padded; the
+        # kernels' shape validation would now reject the oversize block).
+        from repro.core.control_tree import ControlTree
+
+        custom = B.BlockConfig(bm=512, bk=128, bn=256, dtype_bytes=4)
+        tree = ControlTree(device_class="x", block=custom,
+                           backend="pallas_interpret")
+        ctx = X.context_for_tree(tree)
+        cfg = ctx.block_config(128, 128, 64, "float32", 4)
+        assert (cfg.bm, cfg.bk, cfg.bn) == (128, 128, 128)
+        a, b = _rand((128, 128)), _rand((128, 64))
+        via_tree = gemm_with_tree(a, b, tree)
+        np.testing.assert_allclose(
+            np.asarray(via_tree), np.asarray(ref.gemm_ref(a, b)),
+            rtol=1e-5, atol=1e-4,
+        )
 
     def test_hand_built_tree_beats_cache_across_dtypes(self, tmp_path,
                                                        monkeypatch):

@@ -8,7 +8,7 @@ import pytest
 from repro.core.blocking import BlockConfig, PAPER_A15, PAPER_A7, GotoBlocking
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gemm import gemm_pallas
+from repro.kernels.gemm import gemm_pallas, gemm_pallas_lean, validate_block_config
 from repro.kernels.ops import gemm, linear
 
 RNG = np.random.default_rng(42)
@@ -50,6 +50,96 @@ def test_gemm_block_shape_invariance(blocks):
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref.gemm_ref(a, b)), rtol=1e-5, atol=1e-4
     )
+
+
+# ---------------------------------------------------------------------------
+# VMEM-lean k-streaming variant (the TPU_LITTLE micro-kernel)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", GEMM_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_pallas_lean_matches_oracle(shape, dtype):
+    m, k, n = shape
+    a, b = _rand((m, k), dtype), _rand((k, n), dtype)
+    cfg = BlockConfig(bm=128, bk=128, bn=128, dtype_bytes=a.dtype.itemsize)
+    out = gemm_pallas_lean(a, b, cfg, interpret=True)
+    expect = ref.gemm_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=tol, atol=tol
+    )
+
+
+def test_gemm_pallas_lean_bitwise_matches_default():
+    """Same blocks, same fp32 accumulation order — the lean variant is a
+    scheduling/footprint change, not a numeric one."""
+
+    a, b = _rand((384, 300), jnp.float32), _rand((300, 200), jnp.float32)
+    cfg = BlockConfig(bm=128, bk=128, bn=128, dtype_bytes=4)
+    assert np.array_equal(
+        np.asarray(gemm_pallas(a, b, cfg, interpret=True)),
+        np.asarray(gemm_pallas_lean(a, b, cfg, interpret=True)),
+    )
+
+
+def test_gemm_pallas_lean_single_buffer_fit_admits_bigger_panels():
+    """The point of the variant: a config that only fits single-buffered
+    (lean VMEM model) runs correctly through the lean kernel."""
+
+    from repro.core.blocking import TPU_LITTLE
+
+    # (512, 1280, 1024) bf16: ~6.0 MiB single-buffered working set vs
+    # ~10.0 MiB double-buffered — lean-only inside little's 7.55 MiB
+    # budget, exactly the panel the control trees keep for little.
+    cfg = BlockConfig(bm=512, bk=1280, bn=1024, dtype_bytes=2)
+    assert not cfg.fits(TPU_LITTLE)
+    assert cfg.fits(TPU_LITTLE, double_buffer=False)
+    a, b = _rand((512, 1280), jnp.bfloat16), _rand((1280, 1024), jnp.bfloat16)
+    out = gemm_pallas_lean(a, b, cfg, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.gemm_ref(a, b), np.float32),
+        rtol=2e-2, atol=2e-2,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Config-vs-shape validation (regression: oversized bk was silent)
+# ---------------------------------------------------------------------------
+
+
+class TestBlockConfigValidation:
+    def test_bk_exceeding_padded_k_raises(self):
+        """Regression: bk=256 against K=100 (pads to 128) used to be
+        silently accepted — padding K all the way to 256 and more than
+        doubling every grid step's FLOPs."""
+
+        a, b = _rand((128, 100), jnp.float32), _rand((100, 128), jnp.float32)
+        cfg = BlockConfig(bm=128, bk=256, bn=128, dtype_bytes=4)
+        with pytest.raises(ValueError, match=r"bk=256 exceeds padded K=128"):
+            gemm_pallas(a, b, cfg, interpret=True)
+        with pytest.raises(ValueError, match=r"bk=256 exceeds padded K=128"):
+            gemm_pallas_lean(a, b, cfg, interpret=True)
+
+    @pytest.mark.parametrize(
+        "cfg_dims,match",
+        [((512, 128, 128), "bm=512 exceeds padded M"),
+         ((128, 128, 512), "bn=512 exceeds padded N")],
+    )
+    def test_bm_bn_also_validated(self, cfg_dims, match):
+        bm, bk, bn = cfg_dims
+        a, b = _rand((100, 128), jnp.float32), _rand((128, 100), jnp.float32)
+        with pytest.raises(ValueError, match=match):
+            gemm_pallas(a, b, BlockConfig(bm=bm, bk=bk, bn=bn, dtype_bytes=4),
+                        interpret=True)
+
+    def test_blocks_up_to_lane_padding_still_accepted(self):
+        # A block equal to the lane-padded dim is the legitimate way to
+        # run a sub-128 problem; sub-block dims stay fine too.
+        validate_block_config(100, 100, 100, BlockConfig(128, 128, 128, dtype_bytes=4))
+        validate_block_config(300, 200, 180, BlockConfig(128, 256, 128, dtype_bytes=4))
+        validate_block_config(128, 128, 128, BlockConfig(64, 64, 64, dtype_bytes=4))
 
 
 def test_blocked_ref_matches_paper_loop_structure():

@@ -360,3 +360,270 @@ def test_wallclock_backend_runs_small():
     cfg = B.BlockConfig(bm=128, bk=128, bn=128, dtype_bytes=4)
     t = M.wallclock_time(128, 128, 128, cfg, dtype=jnp.float32, reps=1, warmup=0)
     assert t > 0.0
+
+
+def test_wallclock_times_the_lean_kernel_too():
+    cfg = B.BlockConfig(bm=128, bk=128, bn=128, dtype_bytes=4)
+    t = M.wallclock_time(128, 128, 128, cfg, dtype=jnp.float32, reps=1, warmup=0,
+                         kernel_backend="pallas_lean")
+    assert t > 0.0
+    with pytest.raises(ValueError, match="cannot time kernel backend"):
+        M.wallclock_time(128, 128, 128, cfg, kernel_backend="xla")
+
+
+# ---------------------------------------------------------------------------
+# Micro-kernel variants as a search dimension (paper §5.3)
+# ---------------------------------------------------------------------------
+
+# A deliberately constrained, memory-bound core: 2 MiB VMEM and thin HBM.
+# Here the lean kernel's larger single-buffered panels beat the pipelined
+# kernel's overlap — the regime the variant dimension exists for.
+NANO = B.TpuCoreSpec(
+    name="tpu-nano", vmem_bytes=2 * 1024 * 1024,
+    peak_flops=200e12, hbm_bw=50e9,
+)
+
+
+def test_kernel_candidates_widen_the_feasible_set():
+    cands = CAND.enumerate_kernel_candidates(
+        1024, 1024, 1024, spec=NANO, dtype_bytes=4
+    )
+    by_backend = {}
+    for c in cands:
+        by_backend.setdefault(c.backend, []).append(c.cfg)
+    assert set(by_backend) == {"pallas", "pallas_lean"}
+    # Every candidate is feasible under its own kernel's VMEM model...
+    for cfg in by_backend["pallas"]:
+        assert cfg.fits(NANO)
+    for cfg in by_backend["pallas_lean"]:
+        assert cfg.fits(NANO, double_buffer=False)
+    # ...and the lean set contains configs the pipelined kernel cannot
+    # hold (the variant genuinely widens the search space).
+    lean_only = [c for c in by_backend["pallas_lean"] if not c.fits(NANO)]
+    assert lean_only
+    # Dedup covers the variant axis: (cfg, backend) pairs are unique.
+    keys = {c.key for c in cands}
+    assert len(keys) == len(cands)
+    with pytest.raises(ValueError, match="unknown kernel backend"):
+        CAND.enumerate_kernel_candidates(256, 256, 256, backends=["mosaic"])
+    # Dispatch entries that are not timeable kernels are rejected too:
+    # "xla" and the interpret twins are execution modes, not variants a
+    # scorer can model (regression: they used to pass validation and leak
+    # into the cache's recorded-variant field).
+    for not_a_kernel in ("xla", "pallas_interpret", "pallas_lean_interpret"):
+        with pytest.raises(ValueError, match="unknown kernel backend"):
+            CAND.enumerate_kernel_candidates(256, 256, 256,
+                                             backends=[not_a_kernel])
+
+
+def test_kernel_backends_derive_from_the_registry():
+    """One variant registry: the search dimension, the wallclock timer,
+    and the benchmarks all derive from kernels.gemm.GEMM_KERNELS, and
+    every registered variant has dispatch + interpret-twin entries."""
+
+    from repro.core import execution as X
+    from repro.kernels.gemm import GEMM_KERNELS
+
+    assert CAND.KERNEL_BACKENDS == tuple(GEMM_KERNELS)
+    for name in GEMM_KERNELS:
+        assert name in X.BACKENDS
+        assert X.interpret_twin(name) in X.BACKENDS
+
+
+def test_cost_model_serializes_lean_streams():
+    """Pipelined: max(compute, memory) + overhead.  Lean single-buffers,
+    so each K step waits for its DMA: compute + memory + overhead."""
+
+    cfg = B.BlockConfig(bm=256, bk=256, bn=256, dtype_bytes=4)
+    pip = M.cost_breakdown(512, 512, 512, cfg, spec=NANO)
+    lean = M.cost_breakdown(512, 512, 512, cfg, spec=NANO,
+                            kernel_backend="pallas_lean")
+    assert pip.compute_s == lean.compute_s and pip.memory_s == lean.memory_s
+    assert pip.time_s == max(pip.compute_s, pip.memory_s) + pip.overhead_s
+    assert lean.time_s == lean.compute_s + lean.memory_s + lean.overhead_s
+    assert lean.time_s > pip.time_s  # same config: overlap always wins
+
+
+def test_search_picks_lean_when_panels_beat_overlap(tmp_path):
+    """On the constrained memory-bound spec the lean-only panels cut HBM
+    re-reads by more than the lost overlap costs: the search organically
+    selects pallas_lean and the cache records the winning variant."""
+
+    cache = C.TuningCache(path=str(tmp_path / "cache.json"))
+    res = T.tune_shapes(
+        [(1024, 1024, 1024)], spec=NANO, dtype="f32",
+        backend_name="cost-model", cache=cache,
+    )[0]
+    assert res.best_backend == "pallas_lean"
+    assert res.best_time_s < res.analytical_time_s  # beats the pipelined seed
+    assert not res.best.fits(NANO)                  # a lean-only panel won
+    assert res.best.fits(NANO, double_buffer=False)
+
+    key = C.shape_bucket_key(NANO.name, "float32", 1024, 1024, 1024)
+    entry = cache.entries[key]
+    assert entry["backend"] == "pallas_lean"
+    assert entry["measured_with"] == "cost-model"
+
+    # A rerun is a cache hit that reports the recorded variant.
+    hit = T.tune_shapes(
+        [(1024, 1024, 1024)], spec=NANO, dtype="f32",
+        backend_name="cost-model", cache=cache,
+    )[0]
+    assert hit.cache_hit and hit.best_backend == "pallas_lean"
+
+
+def test_single_variant_search_unchanged():
+    """kernel_backends=('pallas',) calls the scorer 4-arg (old protocol)
+    and never proposes lean-only configs."""
+
+    calls = []
+
+    def scorer(m, k, n, cfg):  # no kernel_backend kwarg: the old contract
+        calls.append(cfg)
+        return M.cost_model_time(m, k, n, cfg, spec=NANO)
+
+    res = T.search_shape(512, 512, 512, spec=NANO, dtype_bytes=4,
+                         backend=scorer, kernel_backends=("pallas",))
+    assert res.best_backend == "pallas"
+    assert calls and all(c.fits(NANO) for c in calls)
+
+
+def test_old_cache_backend_field_not_misread_as_variant(tmp_path, monkeypatch):
+    """Pre-variant caches stored the measurement backend ("cost-model")
+    under "backend"; consumers must treat that as 'no variant recorded'
+    and keep the default kernel."""
+
+    from repro.core import execution as X
+
+    cfg = B.BlockConfig(bm=256, bk=256, bn=256, dtype_bytes=2)
+    path = str(tmp_path / "cache.json")
+    cache = C.TuningCache(path=path)
+    cache.put(B.TPU_V5E.name, "bfloat16", 512, 512, 512, cfg, backend="cost-model")
+    cache.save()
+    monkeypatch.setenv(C.ENV_VAR, path)
+
+    assert C.cached_kernel_backend(512, 512, 512, "bfloat16",
+                                   spec_name=B.TPU_V5E.name) == "cost-model"
+    assert X.tuned_kernel_backend(512, 512, 512, spec=B.TPU_V5E,
+                                  dtype_name="bfloat16") is None
+
+    from repro.core.control_tree import build_control_trees
+
+    tree = build_control_trees(
+        {"x": B.TPU_V5E}, 512, 512, 512, backend="pallas_interpret"
+    )["x"]
+    assert tree.block_source == "tuned" and tree.block == cfg
+    assert tree.backend == "pallas_interpret"  # default kernel kept
+
+
+def test_lean_recorded_entry_never_reaches_pipelined_consumers(
+    tmp_path, monkeypatch
+):
+    """Regression: a cache winner recorded for the lean kernel carries a
+    single-buffer-only block; the pipelined kernel's working set is twice
+    what that block was validated under, so every double-buffered lookup
+    path must treat the entry as a miss (and the lean paths keep it)."""
+
+    from repro.core import execution as X
+
+    # Lean-only on TPU_LITTLE: ~6.0 MiB single- vs ~10.0 MiB double-buffered.
+    cfg = B.BlockConfig(bm=512, bk=1280, bn=1024, dtype_bytes=2)
+    assert not cfg.fits(B.TPU_LITTLE) and cfg.fits(B.TPU_LITTLE, double_buffer=False)
+    path = str(tmp_path / "cache.json")
+    cache = C.TuningCache(path=path)
+    cache.put(B.TPU_LITTLE.name, "bfloat16", 2048, 2048, 2048, cfg,
+              backend="pallas_lean")
+    cache.save()
+    monkeypatch.setenv(C.ENV_VAR, path)
+    monkeypatch.setenv(C.ENV_SPEC_VAR, B.TPU_LITTLE.name)
+
+    # The kernel-path resolver: pipelined consumer misses, lean consumer hits.
+    got, src = X.resolve_block_config(
+        2048, 2048, 2048, spec=B.TPU_LITTLE, dtype_name="bfloat16",
+        dtype_bytes=2, double_buffer=True,
+    )
+    assert src == "analytical" and got.fits(B.TPU_LITTLE)
+    got, src = X.resolve_block_config(
+        2048, 2048, 2048, spec=B.TPU_LITTLE, dtype_name="bfloat16",
+        dtype_bytes=2, double_buffer=False,
+    )
+    assert src == "tuned" and got == cfg
+    # Same via the env-spec (cfg=None kernel path, spec=None).
+    _, src = X.resolve_block_config(2048, 2048, 2048, dtype_name="bfloat16",
+                                    dtype_bytes=2, double_buffer=True)
+    assert src == "analytical"
+
+    # The per-call context path: a pipelined tree skips the lean-only
+    # entry for off-bucket calls and derives a block its kernel can hold.
+    from repro.core.control_tree import ControlTree
+
+    tree = ControlTree(
+        device_class="little",
+        block=B.derive_block_config(256, 256, 256, spec=B.TPU_LITTLE),
+        backend="pallas_interpret", spec=B.TPU_LITTLE,
+        problem_shape=(256, 256, 256),
+    )
+    got = X.context_for_tree(tree).block_config(2048, 2048, 2048, "bfloat16", 2)
+    assert got.fits(B.TPU_LITTLE)
+    # ...while the tree-build path pairs the entry with the lean backend.
+    from repro.core.control_tree import build_control_trees
+
+    built = build_control_trees(
+        {"little": B.TPU_LITTLE}, 2048, 2048, 2048, backend="pallas_interpret"
+    )["little"]
+    assert built.block_source == "tuned" and built.block == cfg
+    assert built.backend == "pallas_lean_interpret"
+
+
+def test_cache_aware_false_baseline_stays_uniform(tmp_path, monkeypatch):
+    """Regression: the single-control-tree SAS baseline (cache_aware=False)
+    must mirror the *first* class's configuration wholesale — per-class
+    recorded variants may not leak into the deliberately uniform run."""
+
+    path = str(tmp_path / "cache.json")
+    cache = C.TuningCache(path=path)
+    cfg = B.BlockConfig(bm=256, bk=256, bn=256, dtype_bytes=2)
+    cache.put(B.TPU_V5E.name, "bfloat16", 512, 512, 512, cfg, backend="pallas")
+    cache.put(B.TPU_LITTLE.name, "bfloat16", 512, 512, 512, cfg,
+              backend="pallas_lean")
+    cache.save()
+    monkeypatch.setenv(C.ENV_VAR, path)
+
+    from repro.core.control_tree import build_control_trees
+
+    trees = build_control_trees(
+        {"big": B.TPU_V5E, "little": B.TPU_LITTLE}, 512, 512, 512,
+        backend="pallas", cache_aware=False,
+    )
+    assert trees["little"].block == trees["big"].block
+    assert trees["little"].backend == trees["big"].backend == "pallas"
+
+
+def test_recorded_variant_reaches_the_tree(tmp_path, monkeypatch):
+    """A cache entry recording pallas_lean routes that class's tree to the
+    lean kernel (mapped onto the requested compiled/interpret family)."""
+
+    cfg = B.BlockConfig(bm=256, bk=256, bn=256, dtype_bytes=2)
+    path = str(tmp_path / "cache.json")
+    cache = C.TuningCache(path=path)
+    cache.put(B.TPU_LITTLE.name, "bfloat16", 512, 512, 512, cfg,
+              backend="pallas_lean")
+    cache.save()
+    monkeypatch.setenv(C.ENV_VAR, path)
+
+    from repro.core.control_tree import build_control_trees
+
+    tree = build_control_trees(
+        {"little": B.TPU_LITTLE}, 512, 512, 512, backend="pallas_interpret"
+    )["little"]
+    assert tree.block_source == "tuned"
+    assert tree.backend == "pallas_lean_interpret"
+    tree_hw = build_control_trees(
+        {"little": B.TPU_LITTLE}, 512, 512, 512, backend="pallas"
+    )["little"]
+    assert tree_hw.backend == "pallas_lean"
+    # XLA trees ignore kernel variants (blocks are decorative there).
+    tree_xla = build_control_trees(
+        {"little": B.TPU_LITTLE}, 512, 512, 512, backend="xla"
+    )["little"]
+    assert tree_xla.backend == "xla"
