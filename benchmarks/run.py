@@ -16,12 +16,18 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 def main() -> None:
-    from benchmarks import bench_gemm, bench_paper_figures, bench_schedulers
+    from benchmarks import (
+        bench_gemm,
+        bench_paper_figures,
+        bench_schedulers,
+        bench_serving,
+    )
 
     rows = []
     rows += bench_paper_figures.run()
     rows += bench_schedulers.run()
     rows += bench_gemm.run()
+    rows += bench_serving.run()
 
     print("name,us_per_call,derived")
     for r in rows:

@@ -1,4 +1,9 @@
-"""Serving example: batched greedy decoding with KV caches (and SSM states),
+"""Serving example: the persistent slot-table engine.
+
+Demonstrates the request lifecycle the one-shot demo cannot: two waves of
+requests flow through one long-lived :class:`ServingEngine` — per-class
+queues, fused bulk prefill into the admitted slots, steady-state decode
+with donated state and zero host relayout, slot reuse after completion —
 with the request batch split across heterogeneous classes by the paper's
 schedulers.
 
@@ -9,15 +14,14 @@ import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.asymmetric import AsymmetricMesh, biglittle_classes
 from repro.models import model_zoo as Z
+from repro.runtime.serving import ServingEngine
 
 
 def main():
@@ -36,34 +40,35 @@ def main():
     print("request batch split across classes:", asym.chunk_table(args.batch).sizes())
 
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32
-    )
-    seq_cap = args.prompt_len + args.gen_len
-    decode = jax.jit(Z.make_decode_fn(cfg))
-    state = Z.init_decode_state(cfg, args.batch, seq_cap)
+    seq_cap = args.prompt_len + args.gen_len + 4
+    eng = ServingEngine(cfg, params, asym, seq_cap=seq_cap,
+                        slots_per_pod=max(2, args.batch), class_sharded="auto")
+    print(f"engine: {eng.n_pods} pods x {eng.c_max} slots, "
+          f"class_sharded={eng.mixed}")
 
-    # Decode under the serving class's control tree: the ambient context
-    # configures every projection matmul while the decode fn traces.
-    exec_ctx = asym.execution_context()
-    print(f"serving under device class {exec_ctx.device_class!r} "
-          f"(backend={exec_ctx.backend()})")
-    t0 = time.time()
-    logits = None
-    toks = [prompts]
-    with exec_ctx:
-        for t in range(args.prompt_len):
-            logits, state = decode(params, {"tokens": prompts[:, t:t+1]}, state, jnp.int32(t))
-        for t in range(args.prompt_len, seq_cap):
-            nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            toks.append(nxt)
-            logits, state = decode(params, {"tokens": nxt}, state, jnp.int32(t))
-    out = jnp.concatenate(toks, axis=1)
-    dt = time.time() - t0
-    print(f"arch={cfg.name} generated {args.gen_len} tokens x {args.batch} reqs "
-          f"in {dt:.2f}s ({args.batch*args.gen_len/dt:.1f} tok/s)")
-    print("sample continuation:", np.asarray(out[0, args.prompt_len:]).tolist())
-    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # Wave 1: a homogeneous batch routed per the chunk table.
+    wave1 = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len), dtype=np.int32)
+    out = eng.generate(wave1, args.gen_len)
+    print(f"wave 1: {len(eng.completions)} done, sample continuation:",
+          out[0, args.prompt_len:].tolist())
+
+    # Wave 2: streaming submits with mixed prompt lengths — admitted over
+    # successive rounds into the slots wave 1 freed, decoding concurrently
+    # at heterogeneous slot positions.
+    short = rng.integers(0, cfg.vocab, (args.prompt_len // 2,), dtype=np.int32)
+    long = rng.integers(0, cfg.vocab, (args.prompt_len,), dtype=np.int32)
+    eng.submit(short, args.gen_len)
+    eng.submit(long, args.gen_len)
+    done = {c.rid: c for c in eng.run()}
+    for rid in sorted(done):
+        c = done[rid]
+        print(f"  rid={rid} pod={c.pod} class={c.device_class} slot={c.slot} "
+              f"tokens={c.tokens[c.prompt_len:].tolist()}")
+
+    st = eng.stats
+    print(f"admitted={st.admitted} completed={st.completed} "
+          f"admission_rounds={st.admission_rounds} host_relayouts={st.host_relayouts}")
+    print(f"compile_s={st.compile_s:.2f} steady tokens/s={st.tokens_per_s:.1f}")
     print("done.")
 
 

@@ -369,6 +369,45 @@ class AsymmetricMesh:
         if self.strategy in ("das", "ca-das"):
             self.scheduler.observe(per_pod_units, per_pod_times)
 
+    def slot_budgets(self, slots_per_pod: int, n_work: int) -> list[int]:
+        """Per-pod admission budgets over a fixed ``n_pods × slots_per_pod``
+        slot table (the serving engine's slot regions).
+
+        ``n_work`` is the offered load (in-flight + queued requests); the
+        scheduler's chunk table splits it across pods proportionally to
+        calibrated throughput — under the same rebalance hysteresis as
+        training — and any share exceeding a pod's fixed region spills to
+        pods with headroom (fastest first).  At saturation every region is
+        full; below it, slow pods hold proportionally fewer concurrent
+        requests, the serving analogue of the paper's smaller LITTLE
+        panel.  Budgets change only when the scheduler re-derives its
+        table (drift past the threshold) or the load level changes —
+        never mid-step.
+        """
+
+        cap = int(slots_per_pod)
+        total = min(int(n_work), self.n_pods * cap)
+        if total <= 0:
+            return [0] * self.n_pods
+        sizes = list(self.chunk_table(total).sizes())
+        while len(sizes) < self.n_pods:
+            sizes.append(0)
+        budgets = [min(cap, int(s)) for s in sizes]
+        spill = total - sum(budgets)
+        # Fastest pods absorb the spill first (stable by pod order).
+        order = sorted(
+            range(self.n_pods),
+            key=lambda i: (-self._pod_class[i][1].rel_throughput, i),
+        )
+        while spill > 0:
+            for i in order:
+                if spill == 0:
+                    break
+                take = min(cap - budgets[i], spill)
+                budgets[i] += take
+                spill -= take
+        return budgets
+
     def batch_layout(self, global_batch: int) -> BatchLayout:
         table = self.chunk_table(global_batch)
         sizes = table.sizes()

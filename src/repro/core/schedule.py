@@ -244,6 +244,16 @@ class DynamicScheduler:
     throttling, failing host) automatically sheds work, exactly as the
     paper's dynamic scheme sheds work from the LITTLE cluster — but at step
     granularity, which is what XLA's static shapes allow.
+
+    **Rebalance hysteresis**: re-deriving the table costs a relayout
+    downstream (the trainer re-pads its batch; the serving engine resizes
+    its slot regions), so :meth:`table` keeps returning the *previous*
+    partition until the calibrated throughput shares drift past
+    ``rebalance_threshold`` (relative drift of the normalized rates since
+    the last re-derivation).  This mirrors how the paper's workers keep
+    their assignment between micro-kernel grabs (§5.4) instead of
+    re-partitioning every iteration; noise-level timing jitter no longer
+    thrashes the layout.
     """
 
     def __init__(
@@ -263,8 +273,11 @@ class DynamicScheduler:
         self.rates = np.asarray(
             init_ratios if init_ratios is not None else np.ones(n_classes), dtype=np.float64
         ).copy()
-        self.rebalance_threshold = rebalance_threshold
+        self.rebalance_threshold = float(rebalance_threshold)
         self._last_sizes: Optional[np.ndarray] = None
+        self._last_n_units: Optional[int] = None
+        self._table_rates: Optional[np.ndarray] = None  # rates at last re-derive
+        self._last_table: Optional[ChunkTable] = None
         self.rebalances = 0
 
     def observe(self, class_units: Sequence[int], class_times: Sequence[float]) -> None:
@@ -284,13 +297,55 @@ class DynamicScheduler:
         floor = 0.02 * float(self.rates.max())
         self.rates = np.maximum(self.rates, floor)
 
+    def drift(self) -> float:
+        """Relative drift of the normalized rates since the last re-derive.
+
+        ``max_i |r̂_i - r̂_last_i| / r̂_last_i`` over the per-class
+        throughput *shares* (normalization makes a uniform slowdown — which
+        changes no assignment — zero drift).  ``inf`` before any table has
+        been derived.
+        """
+
+        if self._table_rates is None:
+            return float("inf")
+        cur = self.rates / self.rates.sum()
+        ref = self._table_rates / self._table_rates.sum()
+        return float(np.max(np.abs(cur - ref) / ref))
+
+    def needs_rebalance(self) -> bool:
+        """Would :meth:`table` re-derive the partition right now?"""
+
+        return self.drift() > self.rebalance_threshold
+
     def table(self, n_units: int) -> ChunkTable:
+        """The partition for ``n_units``, re-derived only past hysteresis.
+
+        The cached table is reused while the rate shares stay within
+        ``rebalance_threshold`` of the shares the table was derived from
+        (and ``n_units`` is unchanged); a different ``n_units`` always
+        re-derives (the old sizes cannot cover it) without counting as a
+        rebalance.
+        """
+
+        if (
+            self._last_table is not None
+            and self._last_n_units == n_units
+            and not self.needs_rebalance()
+        ):
+            return self._last_table
         t = sas_partition(n_units, self.rates, workers=self.workers, tiles=self.tiles)
         sizes = np.asarray(t.sizes())
-        if self._last_sizes is not None and len(self._last_sizes) == len(sizes):
-            if np.any(sizes != self._last_sizes):
-                self.rebalances += 1
+        if (
+            self._last_sizes is not None
+            and self._last_n_units == n_units
+            and len(self._last_sizes) == len(sizes)
+            and np.any(sizes != self._last_sizes)
+        ):
+            self.rebalances += 1
         self._last_sizes = sizes
+        self._last_n_units = n_units
+        self._table_rates = self.rates.copy()
+        self._last_table = t
         return t
 
 

@@ -226,6 +226,23 @@ def pod_state_specs(state_tree, *, axis: str = "pod", dim: int = 1):
     return jax.tree.map(f, state_tree)
 
 
+def pod_decode_specs(state_spec, *, axis: str = "pod"):
+    """(in_specs, out_specs) for a slot-table decode step over the pod axis.
+
+    The serving engine's step is ``decode(params, {"tokens": (B,1)},
+    state, pos)`` with ``B = n_pods × c_max`` pod-major slots: params
+    replicated, tokens/positions sharded one slot region per pod, the
+    decode state sharded on its batch (slot) dim.  The same specs serve
+    the engine's bulk prefill (tokens are then ``(B, P)`` — the leading
+    slot dim still shards over pods).
+    """
+
+    sspecs = pod_state_specs(state_spec, axis=axis)
+    in_specs = (P(), {"tokens": P(axis)}, sspecs, P(axis))
+    out_specs = (P(axis), sspecs)
+    return in_specs, out_specs
+
+
 # ---------------------------------------------------------------------------
 # Activation constraints
 # ---------------------------------------------------------------------------
@@ -390,6 +407,7 @@ __all__ = [
     "cache_pspec",
     "cache_sharding",
     "dp_axes",
+    "pod_decode_specs",
     "replicated",
     "use_mesh_for_activations",
     "constrain_batch",

@@ -155,11 +155,23 @@ def decode_step(params, cfg: ArchConfig, batch, state, pos):
     b = tokens.shape[0]
     x = params["embed"][tokens].astype(L.COMPUTE_DTYPE)
     # Sinusoid at a single (traced) position — avoids a (S, D) HLO constant.
+    # ``pos`` may be a scalar or a (B,) vector of per-row positions (the
+    # serving engine's slot table); see layers.decode_attention.
+    pos = jnp.asarray(pos, jnp.int32)
     d = cfg.d_model
     dim = jnp.arange(0, d, 2, dtype=jnp.float32)
-    ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
-    pe = jnp.zeros((d,), jnp.float32).at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
-    x = x + pe[None, None].astype(L.COMPUTE_DTYPE)
+    if pos.ndim > 0:
+        ang = pos[:, None].astype(jnp.float32) / jnp.power(10000.0, dim / d)[None, :]
+        pe = (
+            jnp.zeros((b, d), jnp.float32)
+            .at[:, 0::2].set(jnp.sin(ang))
+            .at[:, 1::2].set(jnp.cos(ang))
+        )
+        x = x + pe[:, None].astype(L.COMPUTE_DTYPE)
+    else:
+        ang = pos.astype(jnp.float32) / jnp.power(10000.0, dim / d)
+        pe = jnp.zeros((d,), jnp.float32).at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+        x = x + pe[None, None].astype(L.COMPUTE_DTYPE)
     acfg = _acfg(cfg, causal=True)
     xcfg = _acfg(cfg, causal=False)
 

@@ -224,20 +224,45 @@ def apply_attention(p, x, cfg: AttnConfig, *, positions=None):
 def decode_attention(p, x, cfg: AttnConfig, cache_k, cache_v, pos):
     """Single-token decode against a (ring or linear) KV cache.
 
-    x: (B, 1, D); cache_k/v: (B, S_cache, Hkv, Dh); pos: scalar int32 —
-    the absolute position of the new token (same across the batch, static
-    batching).  With a sliding window the cache is a ring buffer of size
-    ``window`` and ``pos`` indexes modulo the window.
+    x: (B, 1, D); cache_k/v: (B, S_cache, Hkv, Dh); pos: int32 — the
+    absolute position of the new token.  Either a scalar (same position
+    across the batch, static batching) or a ``(B,)`` vector of *per-row*
+    positions (the serving engine's slot table, where every slot ages
+    independently).  With a sliding window the cache is a ring buffer of
+    size ``window`` and ``pos`` indexes modulo the window.
+
+    The two forms are value-identical when the vector is constant: the
+    per-row cache write places the same bits at the same slot, and the
+    validity mask broadcasts to the same elements — the engine's
+    vector-position step is bit-identical to the scalar-position path
+    (asserted in tests/test_serving.py).  A vector position past the cache
+    length simply writes nothing (the one-hot hits no slot), so retired
+    slots can keep aging harmlessly until they are re-admitted.
     """
 
     b = x.shape[0]
     s_cache = cache_k.shape[1]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim > 0  # (B,) per-row absolute positions
+    positions = pos[:, None] if per_slot else jnp.full((b, 1), pos, jnp.int32)
     q, k, v = _qkv(p, x, cfg, positions)
 
     slot = pos % s_cache if cfg.window is not None else pos
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    if per_slot:
+        # Per-row scatter: O(B·Hkv·Dh) written, aliasable in place under
+        # donation (a broadcast-select would rewrite the whole cache every
+        # token).  mode="drop" skips rows whose position is past the cache
+        # length — the retired phantom lanes write nothing.
+        rows = jnp.arange(b)
+        cache_k = cache_k.at[rows, slot].set(
+            k[:, 0].astype(cache_k.dtype), mode="drop"
+        )
+        cache_v = cache_v.at[rows, slot].set(
+            v[:, 0].astype(cache_v.dtype), mode="drop"
+        )
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
 
     # GQA-native grouped einsum over the raw cache — no KV repetition.
     g = cfg.n_heads // cfg.n_kv_heads
@@ -247,11 +272,19 @@ def decode_attention(p, x, cfg: AttnConfig, cache_k, cache_v, pos):
         preferred_element_type=jnp.float32,
     ) / np.sqrt(cfg.d_head)
     k_idx = jnp.arange(s_cache)
-    if cfg.window is not None:
-        valid = (k_idx <= slot) | (pos >= s_cache)  # ring buffer: all slots valid once wrapped
+    if per_slot:
+        if cfg.window is not None:
+            # ring buffer: all slots valid once wrapped
+            valid = (k_idx[None, :] <= slot[:, None]) | (pos[:, None] >= s_cache)
+        else:
+            valid = k_idx[None, :] <= pos[:, None]
+        s = jnp.where(valid[:, None, None, None, :], s, -1e30)
     else:
-        valid = k_idx <= pos
-    s = jnp.where(valid[None, None, None, None, :], s, -1e30)
+        if cfg.window is not None:
+            valid = (k_idx <= slot) | (pos >= s_cache)
+        else:
+            valid = k_idx <= pos
+        s = jnp.where(valid[None, None, None, None, :], s, -1e30)
     pattn = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DTYPE)
     o = jnp.einsum(
         "bhgqs,bshd->bqhgd", pattn, cache_v.astype(COMPUTE_DTYPE),

@@ -3,6 +3,8 @@
   * ``init_params(key, cfg)``
   * ``make_loss_fn(cfg)``        -> (params, batch) -> (loss, metrics)
   * ``make_prefill_fn(cfg)``     -> (params, batch) -> logits
+    (``with_cache=True``: the fused bulk prefill,
+    (params, batch, state, pos0) -> (last_logits, state))
   * ``make_decode_fn(cfg)``      -> (params, batch, state, pos) -> (logits, state)
   * ``init_decode_state(cfg, batch, seq_len)``
   * ``batch_spec(cfg, shape)``   -> ShapeDtypeStruct inputs for that cell
@@ -35,13 +37,82 @@ def make_loss_fn(cfg: ArchConfig, *, remat: bool = True):
     return f
 
 
-def make_prefill_fn(cfg: ArchConfig):
+def make_prefill_fn(cfg: ArchConfig, *, with_cache: bool = False):
+    """Prefill forward.
+
+    ``with_cache=False`` (default): the full-sequence training-style
+    forward, ``(params, batch) -> logits`` — the throughput path for
+    logits-only prefill (dry-run, scoring).
+
+    ``with_cache=True``: the **fused bulk prefill** the serving stack
+    uses, ``(params, batch, state, pos0) -> (last_logits, state)`` — one
+    jitted forward over the whole prompt that writes the decode state
+    (KV caches / SSM states) in one shot.  See
+    :func:`bulk_prefill_from_decode` for the exactness contract (the
+    written state is bit-identical to the token-by-token decode replay,
+    which the one-shot host loop never was going to get from the chunked
+    training forward).
+    """
+
+    if with_cache:
+        return bulk_prefill_from_decode(make_decode_fn(cfg))
     if cfg.family == "encdec":
         def f(params, batch):
             return E.forward_encdec(params, cfg, batch, remat=False)[0]
     else:
         def f(params, batch):
             return T.prefill(params, cfg, batch)
+    return f
+
+
+def bulk_prefill_from_decode(decode_fn):
+    """Build the fused bulk prefill from any decode-step-compatible fn.
+
+    ``decode_fn(params, {"tokens": (B,1)}, state, pos) -> (logits, state)``
+    becomes ``(params, {"tokens": (B,P)}, state, pos0) -> (logits, state)``:
+    the whole prompt is consumed inside a single jitted program (a
+    ``lax.scan`` over prompt positions), so the host dispatches **one**
+    call per prompt instead of P — and, donated, the decode state updates
+    in place instead of being copied P times through the host loop.
+
+    The scan body *is* the decode recurrence, which makes the resulting
+    cache **bit-identical** to the token-by-token replay — the property
+    the slot-table serving engine needs (a prefilled slot must be
+    indistinguishable from one that decoded those tokens), and one no
+    chunked full-sequence forward can provide: its attention/SSD
+    reductions are associativity-reordered relative to the recurrent
+    form, so its cache agrees only to tolerance.  Bit-identity for every
+    token-in zoo arch is asserted in tests/test_serving.py.
+
+    ``pos0`` is the absolute position of the first prompt token — a
+    scalar, or a (B,) vector of per-slot positions.  Accepts the wrapped
+    ``decode_fn`` so callers can prefill through a class-sharded mixed
+    step (``AsymmetricMesh.class_sharded``) as well as the plain zoo fn.
+    """
+
+    def f(params, batch, state, pos0):
+        if "tokens" not in batch:
+            raise ValueError("bulk prefill needs a token-in batch ({'tokens': (B,P)})")
+        tokens = batch["tokens"]
+        pos0 = jnp.asarray(pos0, jnp.int32)
+        plen = tokens.shape[1]
+
+        def step(state, tok, p):
+            return decode_fn(params, {"tokens": tok}, state, p)
+
+        logits, state = step(state, tokens[:, :1], pos0)
+        if plen > 1:
+            def body(carry, t):
+                st, _ = carry
+                tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+                lg, st = step(st, tok, pos0 + t)
+                return (st, lg), None
+
+            (state, logits), _ = jax.lax.scan(
+                body, (state, logits), jnp.arange(1, plen)
+            )
+        return logits, state
+
     return f
 
 
@@ -91,6 +162,7 @@ __all__ = [
     "init_params",
     "make_loss_fn",
     "make_prefill_fn",
+    "bulk_prefill_from_decode",
     "make_decode_fn",
     "init_decode_state",
     "decode_state_spec",

@@ -282,8 +282,10 @@ def _decode_attn_block(p, x, cfg, ck, cv, pos, *, with_moe: bool, window=None):
 def decode_step(params, cfg: ArchConfig, batch, state, pos):
     """One-token serve step.
 
-    batch: {"tokens": (B,1)} (or {"embeds": (B,1,D)}); pos: scalar int32
-    absolute position.  Returns (logits (B,1,V), new_state).
+    batch: {"tokens": (B,1)} (or {"embeds": (B,1,D)}); pos: int32 absolute
+    position — a scalar (static batching) or a (B,) vector of per-row
+    positions (slot-table serving; see layers.decode_attention).  Returns
+    (logits (B,1,V), new_state).
     """
 
     x = embed_tokens(params, cfg, batch)

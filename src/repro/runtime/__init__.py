@@ -1,1 +1,1 @@
-"""runtime substrate."""
+"""runtime substrate: the training loop and the persistent serving engine."""

@@ -1,0 +1,555 @@
+"""Persistent asymmetric serving runtime: slot table + per-class queues.
+
+The serving-side analogue of the trainer's class-sharded step, and the
+direct transplant of the paper's §5.4 insight: workers *keep* their
+assignments between micro-kernel grabs instead of re-partitioning the
+whole problem every iteration.  The one-shot path (``launch/serve.py
+--one-shot``) does the opposite — it re-pads the request batch per the
+chunk table on every generate call and replays prompts token-by-token
+through per-call jit dispatches, each of which copies the full decode
+state.  This engine amortizes all of it:
+
+  * **Fixed pod-major slot table** — ``n_pods × c_max`` decode slots,
+    each slot one KV-cache lane of a decode state allocated **once**.
+    Pod *i* owns the contiguous slot region ``[i·c_max, (i+1)·c_max)``;
+    on a multi-class mesh the jitted step runs class-sharded
+    (``AsymmetricMesh.class_sharded``), so each pod decodes its region
+    under its own class's control tree — two micro-kernel programs in one
+    SPMD step, ``ShardProvenance``-proven, exactly as in training.
+  * **Per-class request queues + admission router** — requests are routed
+    to a class queue at submit time (largest-remainder over calibrated
+    throughput shares, so the split tracks the chunk table), and admitted
+    into free slots of that class's region between steps.  Once running,
+    a request never moves: steady-state decode performs **zero host
+    relayout** (no ``pad_requests``, no chunk-table re-derivation in the
+    loop — asserted by tests).
+  * **Donated decode state** — the slot state is threaded through the
+    jitted step with ``donate_argnums``, so the KV caches update in place
+    instead of being copied every token (the copy is the dominant
+    per-token cost of the one-shot loop at real cache sizes).
+  * **Fused bulk prefill** — ``model_zoo.make_prefill_fn(cfg,
+    with_cache=True)`` consumes the whole prompt in one jitted program
+    and bulk-writes the admitted slots' cache lanes, bit-identical to the
+    token-by-token replay (the property that makes a prefilled slot
+    indistinguishable from one that decoded its prompt).
+  * **Rebalance hysteresis** — per-pod step timings feed
+    ``DynamicScheduler.observe``; slot-region budgets are re-derived
+    *only* when the calibrated ratio drifts past the scheduler's
+    threshold, and only between steps (admission time), never mid-step.
+
+Per-slot positions (a ``(B,)`` position vector through the decode step —
+see ``layers.decode_attention``) are what make the slot table persistent:
+slots age independently, so a freed slot can be re-admitted while its
+neighbours keep decoding.  Retired slots keep stepping as phantom rows
+(row-local math, discarded tokens), which keeps the engine's program
+identical to the one-shot padded batch — the engine's tokens are
+bit-identical to the one-shot mixed ``class_sharded`` path for the same
+prompts (tested, including through MoE capacity routing, which couples
+batch rows and therefore requires the phantom rows to match too).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.core.asymmetric import AsymmetricMesh
+from repro.distributed import sharding as SH
+from repro.models import model_zoo as Z
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One queued generation request."""
+
+    rid: int
+    prompt: np.ndarray        # (P,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    """A finished request: prompt + generated tokens, and where it ran."""
+
+    rid: int
+    tokens: np.ndarray        # (P + n_generated,) int32
+    prompt_len: int
+    slot: int                 # global slot id (pod-major)
+    pod: int
+    device_class: str
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Timing/behavior counters (compile vs steady state split out)."""
+
+    compile_s: float = 0.0        # first prefill + first decode step (tracing+XLA)
+    prefill_s: float = 0.0        # steady-state bulk prefill seconds
+    decode_s: float = 0.0         # steady-state decode seconds (warmup excluded)
+    decode_steps: int = 0         # steady-state steps counted in decode_s
+    tokens: int = 0               # tokens generated in steady-state steps
+    admitted: int = 0
+    completed: int = 0
+    admission_rounds: int = 0
+    # Host relayouts performed by the decode loop.  Structurally zero: the
+    # engine has no relayout site after admission (requests keep their
+    # slot), which tests/test_serving.py enforces by *poisoning*
+    # pad_requests / chunk_table / batch_layout and running the loop — the
+    # counter exists for the JSON reporting contract, not as the guard.
+    host_relayouts: int = 0
+    rebalances: int = 0           # slot-budget re-derivations past hysteresis
+
+    @property
+    def tokens_per_s(self) -> float:
+        """Steady-state decode throughput (compile/warmup excluded)."""
+
+        return self.tokens / self.decode_s if self.decode_s > 0 else 0.0
+
+
+class ServingEngine:
+    """Persistent slot-table serving engine over an :class:`AsymmetricMesh`.
+
+    Parameters
+    ----------
+    cfg, params : the model (token-in archs only — serving contract).
+    asym : the asymmetric mesh (scheduling state; per-class control trees).
+    seq_cap : per-slot cache length (prompt + generation must fit).
+    slots_per_pod : ``c_max`` — each pod's fixed slot-region size.
+    mesh : jax Mesh with a ``pod`` axis for the class-sharded mixed step;
+        built automatically (host mesh) when class_sharded resolves on.
+    class_sharded : "auto" | "on" | "off" — as in launch/serve.py.
+    donate : donate the decode state through the jitted step (in-place
+        cache updates).  Off only for the A/B test of the donation path.
+    pod_time_hook : optional ``step -> [per-pod seconds]`` feeding the
+        scheduler's straggler calibration (tests / external per-pod
+        telemetry).  Without it the calibration is left untouched — one
+        SPMD step cannot be attributed per pod from the host.
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        asym: AsymmetricMesh,
+        *,
+        seq_cap: int,
+        slots_per_pod: int = 4,
+        mesh=None,
+        class_sharded: str = "auto",
+        donate: bool = True,
+        pod_time_hook: Optional[Callable[[int], Sequence[float]]] = None,
+    ):
+        if cfg.embed_inputs or cfg.family == "encdec":
+            raise ValueError(f"{cfg.name}: the serving engine targets token-in archs")
+        if class_sharded not in ("auto", "on", "off"):
+            raise ValueError(f"class_sharded={class_sharded!r}")
+        self.cfg = cfg
+        self.params = params
+        self.asym = asym
+        self.seq_cap = int(seq_cap)
+        self.c_max = int(slots_per_pod)
+        self.n_pods = asym.n_pods
+        self.n_slots = self.n_pods * self.c_max
+        self.donate = bool(donate)
+        self.pod_time_hook = pod_time_hook
+
+        self.mixed = (
+            class_sharded != "off"
+            and len(asym.classes) > 1
+            and jax.device_count() >= asym.n_pods
+        )
+        if class_sharded == "on" and not self.mixed:
+            raise ValueError(
+                f"class_sharded='on' needs {asym.n_pods} devices, "
+                f"have {jax.device_count()}"
+            )
+        if self.mixed and mesh is None:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(pod=asym.n_pods)
+        self.mesh = mesh
+
+        # -- per-class request queues fed by the admission router ----------
+        self.queues: list[collections.deque] = [
+            collections.deque() for _ in asym.classes
+        ]
+        self._routed = [0] * len(asym.classes)  # total ever routed per class
+        self._next_rid = 0
+        self._pod_class = asym.pod_class_indices()
+
+        # -- host-side slot bookkeeping (the device never sees it) ---------
+        self.slot_rid = np.full(self.n_slots, -1, np.int64)     # -1 = free
+        self.slot_pos = np.zeros(self.n_slots, np.int64)        # next abs position
+        self.slot_remaining = np.zeros(self.n_slots, np.int64)
+        self._slot_req: dict[int, Request] = {}
+        self._slot_toks: dict[int, list[int]] = {}
+        self.budgets = [0] * self.n_pods
+        self.completions: list[Completion] = []
+        self.stats = EngineStats()
+        self._rebalances0 = asym.scheduler.rebalances
+
+        # -- device state: allocated once, donated every step --------------
+        self.state = Z.init_decode_state(cfg, self.n_slots, self.seq_cap)
+        self.tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
+        self._pos = np.zeros(self.n_slots, np.int64)  # device copy passed per step
+        self._step_calls = 0
+        self._prefill_compiled: set[int] = set()
+        self._build()
+
+    # -- compiled programs --------------------------------------------------
+
+    def _build(self):
+        cfg, asym = self.cfg, self.asym
+        decode = Z.make_decode_fn(cfg)
+        state_spec = Z.decode_state_spec(cfg, self.n_slots, self.seq_cap)
+
+        if self.mixed:
+            in_specs, out_specs = SH.pod_decode_specs(state_spec)
+            core = asym.class_sharded(
+                decode,
+                mesh=self.mesh,
+                in_specs=in_specs,
+                out_specs=out_specs,
+            )
+            self.provenance = core.provenance
+        else:
+            ctx = asym.execution_context()
+
+            def core(params, batch, state, pos):
+                with ctx:
+                    return decode(params, batch, state, pos)
+
+            self.provenance = None
+        self._core = core
+
+        def step_fn(params, tokens, state, pos):
+            logits, state = core(params, {"tokens": tokens}, state, pos)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            return nxt, state
+
+        donate = (2,) if self.donate else ()
+        self._step = jax.jit(step_fn, donate_argnums=donate)
+
+        bulk = Z.bulk_prefill_from_decode(core)
+
+        def prefill_fn(params, prompts):
+            # Fresh zero state traced inside the program: the fused prefill
+            # writes every admitted lane from scratch in one shot.
+            fresh = Z.init_decode_state(cfg, self.n_slots, self.seq_cap)
+            pos0 = jnp.zeros((self.n_slots,), jnp.int32)
+            logits, state = bulk(params, {"tokens": prompts}, fresh, pos0)
+            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            return nxt, state
+
+        self._prefill = jax.jit(prefill_fn)
+
+        def merge_fn(old_state, new_state, old_tokens, new_tokens, take_new):
+            # Lanes in ``take_new`` — the admitted slots plus every free
+            # (phantom) lane — take their freshly prefilled lane wholesale
+            # (full-row replace: stale cache tails from the previous tenant
+            # vanish); busy slots keep their lane bit-for-bit.  Refreshing
+            # the phantom lanes keeps them identical to the one-shot padded
+            # batch's rows, which MoE capacity routing (cross-row coupling)
+            # requires for output bit-identity.  The batch (slot) dim of
+            # every state leaf is dim 1.
+            def pick(o, n):
+                shape = [1] * o.ndim
+                shape[1] = o.shape[1]
+                return jnp.where(take_new.reshape(shape), n, o)
+
+            state = jax.tree.map(pick, old_state, new_state)
+            tokens = jnp.where(take_new[:, None], new_tokens, old_tokens)
+            return state, tokens
+
+        self._merge = jax.jit(merge_fn, donate_argnums=(0,) if self.donate else ())
+
+    # -- admission router ----------------------------------------------------
+
+    def _class_weights(self) -> np.ndarray:
+        rates = np.zeros(len(self.asym.classes), np.float64)
+        for pod, ci in enumerate(self._pod_class):
+            rates[ci] += self.asym.scheduler.rates[pod]
+        return rates
+
+    def submit(self, prompt, max_new_tokens: int, *, route_class: Optional[int] = None) -> int:
+        """Queue one request; returns its rid.
+
+        The router assigns the request to a class queue by largest
+        remainder over the calibrated per-class throughput shares — the
+        cumulative routed counts track the chunk table's split, so a batch
+        of N submits lands exactly on ``chunk_table(N)`` aggregated by
+        class.  ``route_class`` overrides (the batch path routes per an
+        explicit layout so it reproduces ``pad_requests`` placement).
+        """
+
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) + int(max_new_tokens) > self.seq_cap:
+            raise ValueError(
+                f"prompt({len(prompt)}) + max_new({max_new_tokens}) exceeds "
+                f"seq_cap={self.seq_cap}"
+            )
+        if len(prompt) == 0 or max_new_tokens < 1:
+            raise ValueError("need a non-empty prompt and max_new_tokens >= 1")
+        rid = self._next_rid
+        self._next_rid += 1
+        if route_class is None:
+            w = self._class_weights()
+            total = sum(self._routed) + 1
+            quota = w / w.sum() * total
+            base = np.floor(quota).astype(np.int64)
+            rem = total - int(base.sum())
+            order = np.argsort(-(quota - base), kind="stable")
+            base[order[:rem]] += 1
+            deficits = base - np.asarray(self._routed)
+            route_class = int(np.argmax(deficits))
+        self.queues[route_class].append(
+            Request(rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens))
+        )
+        self._routed[route_class] += 1
+        return rid
+
+    # -- slot-region budgets (resize between steps only) ---------------------
+
+    def _refresh_budgets(self):
+        n_work = int((self.slot_rid >= 0).sum()) + sum(len(q) for q in self.queues)
+        self.budgets = self.asym.slot_budgets(self.c_max, n_work)
+        # The scheduler re-derives its table (counting a rebalance) only
+        # past the hysteresis threshold — whether the trigger was a budget
+        # refresh or the batch path's routing table.
+        self.stats.rebalances = self.asym.scheduler.rebalances - self._rebalances0
+
+    def _pod_active(self) -> list[int]:
+        act = (self.slot_rid >= 0).reshape(self.n_pods, self.c_max)
+        return [int(a.sum()) for a in act]
+
+    def _free_slot(self, pod: int) -> Optional[int]:
+        if self._pod_active()[pod] >= self.budgets[pod]:
+            return None
+        return self._any_free_slot(pod)
+
+    def _any_free_slot(self, pod: int) -> Optional[int]:
+        lo = pod * self.c_max
+        for s in range(lo, lo + self.c_max):
+            if self.slot_rid[s] < 0:
+                return s
+        return None
+
+    # -- admission (bulk prefill into free slots) -----------------------------
+
+    def admit(self) -> int:
+        """Admit queued requests into free budgeted slots; returns count.
+
+        One admission round prefills one prompt length (the head of each
+        queue gates what joins the round — mixed lengths admit over
+        successive rounds).  The fused prefill runs over the full slot
+        table (free lanes see zero prompts — the same phantom rows the
+        one-shot padded batch carries) and the merge writes only the
+        admitted lanes, donated, so running slots are untouched in place.
+        """
+
+        self._refresh_budgets()
+        busy_before = self.slot_rid >= 0
+        plen = None
+        for q in self.queues:
+            if q:
+                plen = len(q[0].prompt) if plen is None else min(plen, len(q[0].prompt))
+        if plen is None:
+            return 0
+
+        def take(budgeted: bool) -> list[tuple[int, "Request"]]:
+            out = []
+            for ci, q in enumerate(self.queues):
+                pods = [p for p, c in enumerate(self._pod_class) if c == ci]
+                while q and len(q[0].prompt) == plen:
+                    slot = None
+                    for pod in pods:
+                        slot = (
+                            self._free_slot(pod)
+                            if budgeted
+                            else self._any_free_slot(pod)
+                        )
+                        if slot is not None:
+                            break
+                    if slot is None:
+                        break
+                    req = q.popleft()
+                    out.append((slot, req))
+                    self.slot_rid[slot] = req.rid  # reserve before next _free_slot
+            return out
+
+        batch = take(budgeted=True)
+        if not batch and not busy_before.any():
+            # Starvation guard: a queue whose class drew a zero budget at
+            # low load must still make progress when nothing is running
+            # (the scheduler's starvation floor, at admission granularity).
+            batch = take(budgeted=False)
+        if not batch:
+            return 0
+
+        prompts = np.zeros((self.n_slots, plen), np.int32)
+        for slot, req in batch:
+            prompts[slot] = req.prompt
+        # Admitted slots plus every phantom (free) lane take the fresh
+        # prefill — see merge_fn.
+        take_new = ~busy_before
+
+        t0 = time.perf_counter()
+        nxt, fresh_state = self._prefill(self.params, jnp.asarray(prompts))
+        self.state, self.tokens = self._merge(
+            self.state, fresh_state, self.tokens, nxt, jnp.asarray(take_new)
+        )
+        first = np.asarray(nxt)  # blocks; first generated token per lane
+        dt = time.perf_counter() - t0
+        if plen in self._prefill_compiled:
+            self.stats.prefill_s += dt
+        else:
+            self._prefill_compiled.add(plen)
+            self.stats.compile_s += dt
+
+        for slot, req in batch:
+            self.slot_pos[slot] = plen
+            self._slot_req[slot] = req
+            self._slot_toks[slot] = [int(first[slot, 0])]
+            self.slot_remaining[slot] = req.max_new_tokens - 1
+            self.stats.admitted += 1
+            if self.slot_remaining[slot] == 0:
+                self._retire(slot)
+        self._pos[take_new] = plen
+        self.stats.admission_rounds += 1
+        return len(batch)
+
+    def _retire(self, slot: int):
+        req = self._slot_req.pop(slot)
+        pod = slot // self.c_max
+        self.completions.append(
+            Completion(
+                rid=req.rid,
+                tokens=np.concatenate(
+                    [req.prompt, np.asarray(self._slot_toks.pop(slot), np.int32)]
+                ),
+                prompt_len=len(req.prompt),
+                slot=slot,
+                pod=pod,
+                device_class=self.asym.class_of_pod(pod).name,
+            )
+        )
+        self.slot_rid[slot] = -1
+        self.slot_remaining[slot] = 0
+        self.stats.completed += 1
+
+    # -- steady-state decode ---------------------------------------------------
+
+    def step(self) -> int:
+        """One decode step over the whole slot table; returns active count.
+
+        No host relayout: the step consumes the resident token/position
+        vectors and the donated slot state.  Every slot advances (freed
+        slots as phantom rows), matching the one-shot padded batch
+        program exactly.
+        """
+
+        active = self.slot_rid >= 0
+        n_active = int(active.sum())
+        if n_active == 0:
+            return 0
+        t0 = time.perf_counter()
+        nxt, self.state = self._step(
+            self.params, self.tokens, self.state, jnp.asarray(self._pos, jnp.int32)
+        )
+        self.tokens = nxt
+        toks = np.asarray(nxt)  # blocks: the step's wall time is real
+        dt = time.perf_counter() - t0
+        if self._step_calls == 0:
+            self.stats.compile_s += dt
+        else:
+            self.stats.decode_s += dt
+            self.stats.decode_steps += 1
+            self.stats.tokens += n_active
+        self._step_calls += 1
+        self._pos += 1  # every slot ages (phantom rows match one-shot padding)
+
+        for slot in np.nonzero(active)[0]:
+            self._slot_toks[int(slot)].append(int(toks[slot, 0]))
+            self.slot_remaining[slot] -= 1
+            if self.slot_remaining[slot] == 0:
+                self._retire(int(slot))
+
+        # Straggler feedback: per-pod timings re-calibrate the scheduler
+        # (budgets only re-derive at admission, past hysteresis).  One
+        # SPMD step yields one wall time, not per-pod times — without a
+        # hook there is no per-pod signal, and fabricating equal times
+        # would read occupancy as speed and erode the calibrated ratios
+        # (at full occupancy every pod shows the same units/dt), so the
+        # calibration is left untouched.
+        if self.pod_time_hook is not None:
+            times = list(self.pod_time_hook(self._step_calls - 1))
+            self.asym.observe_step(self._pod_active_before(active), times)
+        return n_active
+
+    def _pod_active_before(self, active_mask: np.ndarray) -> list[int]:
+        act = active_mask.reshape(self.n_pods, self.c_max)
+        return [int(a.sum()) for a in act]
+
+    # -- driver ----------------------------------------------------------------
+
+    def run(self, *, max_steps: Optional[int] = None) -> list[Completion]:
+        """Admit + decode until queues and slots drain.
+
+        Returns the completions produced by *this* call (the cumulative
+        history stays available as ``self.completions``).
+        """
+
+        start = len(self.completions)
+        steps = 0
+        while True:
+            if any(self.queues):
+                admitted = self.admit()
+                if admitted == 0 and not (self.slot_rid >= 0).any():
+                    raise RuntimeError(
+                        "admission made no progress with an empty slot table"
+                    )  # unreachable: the starvation guard admits something
+            if not (self.slot_rid >= 0).any():
+                break
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.completions[start:]
+
+    def generate(self, prompts: np.ndarray, gen_len: int) -> np.ndarray:
+        """Batch convenience: decode ``prompts`` (B, P) for ``gen_len`` tokens.
+
+        Routes per the scheduler's chunk table in request order —
+        reproducing exactly the ``pad_requests`` pod-major placement of
+        the one-shot path, which is what makes the outputs bit-identical
+        to it (same slot layout, same phantom rows).  Returns
+        ``(B, P + gen_len)`` tokens in submission order.
+        """
+
+        prompts = np.asarray(prompts, np.int32)
+        n = prompts.shape[0]
+        sizes = self.asym.chunk_table(n).sizes()
+        rid_of = {}
+        pos = 0
+        for pod, size in enumerate(sizes):
+            ci = self._pod_class[pod]
+            for r in range(pos, pos + size):
+                rid_of[self.submit(prompts[r], gen_len, route_class=ci)] = r
+            pos += size
+        done = self.run()
+        out = np.zeros((n, prompts.shape[1] + gen_len), np.int32)
+        for c in done:
+            if c.rid in rid_of:
+                out[rid_of[c.rid], : len(c.tokens)] = c.tokens
+        return out
+
+
+__all__ = ["ServingEngine", "Request", "Completion", "EngineStats"]

@@ -120,6 +120,45 @@ class TestDynamicScheduler:
         d.table(100)
         assert d.rebalances >= 1
 
+    def test_hysteresis_holds_table_below_threshold(self):
+        # Sub-threshold drift must NOT re-derive the partition: the table
+        # object is reused verbatim and no rebalance is counted, even
+        # though a fresh SAS split of the drifted rates would differ.
+        d = S.DynamicScheduler(2, init_ratios=[1.0, 1.0], tiles=[1, 1],
+                               rebalance_threshold=0.05)
+        t0 = d.table(100)
+        assert t0.sizes() == [50, 50]
+        d.rates = np.array([1.06, 1.0])  # fresh SAS would give [51, 49]
+        assert not d.needs_rebalance()   # normalized drift ~2.9% < 5%
+        t1 = d.table(100)
+        assert t1 is t0
+        assert d.rebalances == 0
+
+    def test_hysteresis_releases_past_threshold(self):
+        d = S.DynamicScheduler(2, init_ratios=[1.0, 1.0], tiles=[1, 1],
+                               rebalance_threshold=0.05)
+        d.table(100)
+        d.rates = np.array([1.3, 1.0])
+        assert d.needs_rebalance()       # drift ~13% > 5%
+        t1 = d.table(100)
+        assert t1.sizes() == [57, 43]
+        assert d.rebalances == 1
+        # The new rates become the hysteresis anchor.
+        assert not d.needs_rebalance()
+
+    def test_hysteresis_different_n_units_rederives_without_counting(self):
+        # A different unit count always re-derives (the cached sizes can't
+        # cover it) but is not a "rebalance" — the split didn't drift.
+        d = S.DynamicScheduler(2, init_ratios=[2.0, 1.0], tiles=[1, 1])
+        a = d.table(90)
+        b = d.table(60)
+        assert sum(a.sizes()) == 90 and sum(b.sizes()) == 60
+        assert d.rebalances == 0
+
+    def test_drift_before_any_table_is_infinite(self):
+        d = S.DynamicScheduler(2)
+        assert d.drift() == float("inf") and d.needs_rebalance()
+
     def test_balanced_ratio(self):
         assert S.balanced_ratio([9.6, 2.4]) == pytest.approx(4.0)
 
