@@ -180,7 +180,8 @@ def run(pallas_backends=None) -> list[Row]:
 
     # Host-dependent wallclock records go to their own file — the plain
     # BENCH_gemm.json name is reserved for the committed CI baseline.
-    write_json("BENCH_gemm_full.json", records)
+    write_json("BENCH_gemm_full.json", records, bench="gemm_full",
+               spec=TPU_V5E.name)
     return rows
 
 
@@ -194,7 +195,8 @@ def run_cost_model() -> list[Row]:
     """
 
     rows, records = tuned_vs_analytical()
-    write_json("BENCH_gemm.json", records)
+    write_json("BENCH_gemm.json", records, bench="gemm_cost_model",
+               spec=TPU_V5E.name)
     return rows
 
 

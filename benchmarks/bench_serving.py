@@ -125,7 +125,7 @@ def engine_rounds(cfg, params, prompts, gen_len, seq_cap, reps, *, mixed):
 
 def run(arch: str = "internlm2-1.8b", batch: int = 8, prompt_len: int = 8,
         gen_len: int = 48, seq_cap: int = 512, reps: int = 3,
-        mixed: bool = False) -> list[Row]:
+        mixed: bool = False, obs: bool = False) -> list[Row]:
     """Both sides on identical prompts/layout; writes ``BENCH_serving.json``.
 
     ``seq_cap`` is deliberately larger than prompt+gen: the decode-state
@@ -181,7 +181,30 @@ def run(arch: str = "internlm2-1.8b", batch: int = 8, prompt_len: int = 8,
         }
         rows.append(Row("serve_engine_mixed", 1e6 / max(mix_tps, 1e-9),
                         f"tokens_per_s={mix_tps:.1f}"))
-    path = write_json("BENCH_serving.json", [record])
+    if obs:
+        # Informational: the engine with tracing + the default step-time
+        # probe active — the measured enabled-path overhead of the
+        # observability contract.  Not gated (the gate runs disabled).
+        from repro import observability as OBS
+
+        OBS.enable()
+        try:
+            eobs = engine_rounds(cfg, params, prompts, gen_len, seq_cap, reps,
+                                 mixed=False)
+        finally:
+            buf = OBS.disable()
+        obs_tps = float(np.median(eobs["rates"]))
+        overhead = 1.0 - obs_tps / eng_tps if eng_tps else 0.0
+        record["engine_observed"] = {
+            "tokens_per_s": round(obs_tps, 1),
+            "overhead_pct": round(100.0 * overhead, 1),
+            "trace_events": len(buf.events) if buf else 0,
+        }
+        rows.append(Row("serve_engine_traced", 1e6 / max(obs_tps, 1e-9),
+                        f"tokens_per_s={obs_tps:.1f} "
+                        f"overhead_pct={100.0 * overhead:.1f}"))
+    path = write_json("BENCH_serving.json", [record], bench="serving",
+                      arch=cfg.name)
     print(f"wrote {path}")
     return rows
 
@@ -196,11 +219,14 @@ def main():
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--mixed", action="store_true",
                     help="add the informational class-sharded engine row")
+    ap.add_argument("--obs", action="store_true",
+                    help="add the informational tracing-enabled engine row "
+                         "(measures the observability enabled-path overhead)")
     ap.add_argument("--check", action="store_true",
                     help="exit non-zero unless the engine is strictly faster")
     args = ap.parse_args()
     rows = run(args.arch, args.batch, args.prompt_len, args.gen_len,
-               args.seq_cap, args.reps, args.mixed)
+               args.seq_cap, args.reps, args.mixed, args.obs)
     for r in rows:
         print(f"{r.name},{r.us_per_call:.1f},{r.derived}")
     if args.check:

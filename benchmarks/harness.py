@@ -1,14 +1,23 @@
-"""Benchmark harness: timing helper + CSV emission.
+"""Benchmark harness: timing helper + CSV/JSON emission.
 
 Every benchmark module exposes ``run() -> list[Row]``; ``run.py`` collects
 them and prints the ``name,us_per_call,derived`` CSV required by the
 assignment, plus writes per-figure CSV artifacts under ``artifacts/bench``.
+
+``write_json`` artifacts are self-describing: every ``BENCH_*.json``
+carries a ``meta`` block (git sha, jax version, timestamp, plus whatever
+the benchmark passes — spec name, arch) alongside its ``records``, so
+the perf trajectory across commits needs no out-of-band context.  Since
+the meta block is volatile by design, baseline comparison goes through
+``python -m benchmarks.harness --compare OLD NEW`` (records only) — the
+CI gate for the committed ``BENCH_gemm.json``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import os
+import subprocess
 import time
 from typing import Callable, Optional
 
@@ -45,14 +54,105 @@ def write_csv(fname: str, header: str, lines: list[str]) -> str:
     return path
 
 
-def write_json(fname: str, records: list[dict]) -> str:
-    """Machine-readable benchmark artifact (one record per measured cell)."""
+def run_metadata(**extra) -> dict:
+    """Shared run provenance stamped into every ``BENCH_*.json``."""
+
+    import datetime
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or None
+    except OSError:
+        sha = None
+    try:
+        import jax
+
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    meta = {
+        "git_sha": sha,
+        "jax_version": jax_version,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"
+        ),
+    }
+    meta.update(extra)
+    return meta
+
+
+def write_json(fname: str, records: list[dict], **meta) -> str:
+    """Machine-readable benchmark artifact: ``{"meta": ..., "records":
+    [...]}`` — one record per measured cell, plus run provenance
+    (``run_metadata`` fields merged with the keyword extras)."""
 
     import json
 
     os.makedirs(ART_DIR, exist_ok=True)
     path = os.path.join(ART_DIR, fname)
     with open(path, "w") as f:
-        json.dump(records, f, indent=1, sort_keys=True)
+        json.dump({"meta": run_metadata(**meta), "records": records},
+                  f, indent=1, sort_keys=True)
         f.write("\n")
     return path
+
+
+def load_records(path: str) -> list:
+    """Records of a ``write_json`` artifact (tolerates the pre-meta
+    bare-list format so old baselines still compare)."""
+
+    import json
+
+    with open(path) as f:
+        data = json.load(f)
+    return data["records"] if isinstance(data, dict) else data
+
+
+def compare_records(old_path: str, new_path: str) -> list[str]:
+    """Structural record diff (meta excluded); empty list == identical."""
+
+    old, new = load_records(old_path), load_records(new_path)
+    diffs = []
+    if len(old) != len(new):
+        diffs.append(f"record count: {len(old)} -> {len(new)}")
+    for i, (o, n) in enumerate(zip(old, new)):
+        if o != n:
+            if isinstance(o, dict) and isinstance(n, dict):
+                keys = sorted(
+                    k for k in set(o) | set(n) if o.get(k) != n.get(k)
+                )
+                diffs.append(
+                    f"record[{i}]: " + ", ".join(
+                        f"{k}: {o.get(k)!r} -> {n.get(k)!r}" for k in keys
+                    )
+                )
+            else:
+                diffs.append(f"record[{i}]: {o!r} -> {n!r}")
+    return diffs
+
+
+def main() -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.harness",
+        description="Compare two BENCH_*.json artifacts by records "
+                    "(volatile meta ignored).",
+    )
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"), required=True)
+    args = ap.parse_args()
+    diffs = compare_records(*args.compare)
+    for d in diffs:
+        print(d)
+    if diffs:
+        print(f"{len(diffs)} record difference(s)")
+        return 1
+    print("records identical")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

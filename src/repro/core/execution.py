@@ -49,6 +49,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import TPU_V5E, BlockConfig, TpuCoreSpec, derive_block_config
+from repro.observability import trace as _obs
 
 if TYPE_CHECKING:  # control_tree imports Backend from here; keep it one-way.
     from repro.core.control_tree import ControlTree
@@ -603,6 +604,11 @@ def class_sharded(
         def single(*args):
             with ctx:
                 trace_log.append((ctx.device_class, ctx.tree.block_source))
+                _obs.instant(
+                    "execution.trace", cat="execution", mixed=False,
+                    device_class=ctx.device_class, backend=ctx.backend(),
+                    block_source=ctx.tree.block_source,
+                )
                 out = fn(*args)
             if epilogue is not None:
                 out = epilogue(out, args, None)
@@ -629,6 +635,11 @@ def class_sharded(
                 # Trace-time record: this class's tree was ambient while
                 # its per-class program was built.
                 trace_log.append((ctx.device_class, ctx.tree.block_source))
+                _obs.instant(
+                    "execution.trace", cat="execution", mixed=True,
+                    device_class=ctx.device_class, backend=ctx.backend(),
+                    block_source=ctx.tree.block_source,
+                )
                 return fn(*ops)
 
         return branch

@@ -34,6 +34,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.observability import trace as _trace
+
 
 @dataclasses.dataclass(frozen=True)
 class Chunk:
@@ -333,6 +335,7 @@ class DynamicScheduler:
             and not self.needs_rebalance()
         ):
             return self._last_table
+        drift = self.drift()  # trigger magnitude, before _table_rates resets
         t = sas_partition(n_units, self.rates, workers=self.workers, tiles=self.tiles)
         sizes = np.asarray(t.sizes())
         if (
@@ -342,6 +345,13 @@ class DynamicScheduler:
             and np.any(sizes != self._last_sizes)
         ):
             self.rebalances += 1
+            _trace.instant(
+                "scheduler.rebalance", cat="scheduler",
+                drift=drift, threshold=self.rebalance_threshold,
+                n_units=n_units,
+                before=[int(s) for s in self._last_sizes],
+                after=[int(s) for s in sizes],
+            )
         self._last_sizes = sizes
         self._last_n_units = n_units
         self._table_rates = self.rates.copy()

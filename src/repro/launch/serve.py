@@ -196,13 +196,7 @@ def _engine(cfg, params, asym, prompts, args, seq_cap):
         ctx = asym.execution_context()
         shard_classes = None
         device_class, exec_backend = ctx.device_class, ctx.backend()
-    engine_stats = {
-        "slots": [eng.n_pods, eng.c_max],
-        "admission_rounds": st.admission_rounds,
-        "host_relayouts": st.host_relayouts,
-        "rebalances": st.rebalances,
-        "completed": st.completed,
-    }
+    engine_stats = {"slots": [eng.n_pods, eng.c_max], **st.snapshot()}
     return out, timings, device_class, exec_backend, shard_classes, engine_stats
 
 
@@ -225,7 +219,19 @@ def main():
                          "per-token jit dispatches (comparison baseline)")
     ap.add_argument("--slots-per-pod", type=int, default=None,
                     help="engine slot-region size (default: the layout's c_max)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable observability and write the trace here "
+                         "(native format; summarize / export Chrome trace "
+                         "with python -m repro.observability.report)")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="enable observability and write a metrics JSON "
+                         "snapshot here")
     args = ap.parse_args()
+
+    if args.trace or args.metrics:
+        from repro import observability as OBS
+
+        OBS.enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -280,6 +286,18 @@ def main():
     }
     if engine_stats is not None:
         summary["engine"] = engine_stats
+    if args.trace or args.metrics:
+        from repro import observability as OBS
+        from repro.observability import trace as TR
+
+        buf = TR.get_buffer()
+        if args.trace:
+            summary["trace"] = buf.save(args.trace)
+        if args.metrics:
+            with open(args.metrics, "w") as f:
+                json.dump(OBS.REGISTRY.snapshot(), f, indent=1, sort_keys=True)
+                f.write("\n")
+            summary["metrics"] = args.metrics
     print(json.dumps(summary))
 
 

@@ -1,0 +1,38 @@
+"""Telemetry for the asymmetric-scheduling stack: spans, metrics, probe.
+
+Three surfaces, one switch:
+
+  * :mod:`repro.observability.trace` — contextvar-nested spans over a
+    bounded in-memory event buffer, exported as Chrome-trace/Perfetto
+    JSON.  Spans carry the scheduling provenance the rest of the repo
+    already proves (device class, backend variant, ``block_source``).
+  * :mod:`repro.observability.metrics` — a registry of labeled
+    counters/gauges/histograms with Prometheus text exposition and a
+    JSON snapshot.
+  * :mod:`repro.observability.probe` — the measured per-pod step-time
+    probe that plugs into ``ServingEngine(pod_time_hook=...)`` and
+    closes the paper's DAS calibration loop (§5.2.2/§5.4) on real
+    timings instead of fabricated ones.
+
+**Off is free.**  Everything here is disabled by default; the disabled
+path is a single ``None`` check per instrumentation site.  Nothing in
+this package imports jax, instrumentation never alters a jitted program
+(events are recorded around already-measured wall times), and the
+default engine probe returns ``None`` (frozen calibration, zero work)
+while observability is off — the contract the ``bench_serving`` gate
+enforces.
+
+Enable with :func:`enable` (or ``repro.launch.serve --trace/--metrics``)
+and summarize with ``python -m repro.observability.report``.
+"""
+
+from repro.observability import metrics  # noqa: F401
+from repro.observability.metrics import REGISTRY  # noqa: F401
+from repro.observability.trace import (  # noqa: F401
+    disable,
+    enable,
+    enabled,
+    get_buffer,
+)
+
+__all__ = ["enable", "disable", "enabled", "get_buffer", "metrics", "REGISTRY"]

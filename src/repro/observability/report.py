@@ -1,0 +1,144 @@
+"""Trace report CLI: summarize a trace file, export Chrome trace JSON.
+
+Reads either the native buffer format (``TraceBuffer.save``) or an
+already-exported Chrome ``traceEvents`` file and prints a per-name
+summary (count, total/mean/max duration) plus a per-device-class
+rollup of the spans that carry scheduling provenance.
+
+Usage::
+
+    python -m repro.observability.report trace.json [--chrome out.json]
+                                                    [--top N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional, Sequence
+
+
+def load_events(path: str) -> tuple[list[dict], dict]:
+    """Normalize either trace format to native-style event dicts
+    (``ts``/``dur`` in seconds); returns ``(events, meta)``."""
+
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and "traceEvents" in data:
+        events = []
+        for ev in data["traceEvents"]:
+            events.append({
+                "name": ev.get("name", "?"),
+                "cat": ev.get("cat", "span"),
+                "ph": ev.get("ph", "X"),
+                "ts": float(ev.get("ts", 0.0)) / 1e6,
+                "dur": float(ev.get("dur", 0.0)) / 1e6,
+                "tid": ev.get("tid", 0),
+                "parent": (ev.get("args") or {}).get("parent"),
+                "args": ev.get("args") or {},
+            })
+        return events, {"format": "chrome", **(data.get("otherData") or {})}
+    if isinstance(data, dict) and "events" in data:
+        meta = {k: v for k, v in data.items() if k != "events"}
+        return list(data["events"]), {"format": "native", **meta}
+    raise ValueError(f"{path}: neither a native trace nor a Chrome trace")
+
+
+def summarize(events: list[dict], *, top: int = 20) -> str:
+    spans = [e for e in events if e.get("ph") == "X"]
+    instants = [e for e in events if e.get("ph") == "i"]
+
+    by_name: dict[str, list[float]] = {}
+    for e in spans:
+        by_name.setdefault(e["name"], []).append(float(e.get("dur", 0.0)))
+    by_class: dict[str, list[float]] = {}
+    for e in spans:
+        dc = (e.get("args") or {}).get("device_class")
+        if dc:
+            by_class.setdefault(str(dc), []).append(float(e.get("dur", 0.0)))
+
+    lines = [
+        f"{len(events)} events ({len(spans)} spans, {len(instants)} instants)",
+        "",
+        f"{'span':<32}{'count':>8}{'total_ms':>12}{'mean_ms':>10}{'max_ms':>10}",
+    ]
+    ranked = sorted(by_name.items(), key=lambda kv: -sum(kv[1]))
+    for name, durs in ranked[:top]:
+        total = sum(durs)
+        lines.append(
+            f"{name:<32}{len(durs):>8}{total * 1e3:>12.2f}"
+            f"{total / len(durs) * 1e3:>10.3f}{max(durs) * 1e3:>10.3f}"
+        )
+    if len(ranked) > top:
+        lines.append(f"... {len(ranked) - top} more span names (--top to widen)")
+
+    if by_class:
+        lines += ["", f"{'device_class':<32}{'spans':>8}{'total_ms':>12}"]
+        for dc, durs in sorted(by_class.items()):
+            lines.append(f"{dc:<32}{len(durs):>8}{sum(durs) * 1e3:>12.2f}")
+
+    if instants:
+        counts: dict[str, int] = {}
+        for e in instants:
+            counts[e["name"]] = counts.get(e["name"], 0) + 1
+        lines += ["", "instants: " + ", ".join(
+            f"{n}×{c}" for n, c in sorted(counts.items())
+        )]
+    return "\n".join(lines)
+
+
+def export_chrome(events: list[dict], path: str) -> str:
+    import os
+
+    out = []
+    for e in events:
+        rec = {
+            "name": e.get("name", "?"),
+            "cat": e.get("cat", "span"),
+            "ph": e.get("ph", "X"),
+            "ts": round(max(float(e.get("ts", 0.0)), 0.0) * 1e6, 3),
+            "pid": os.getpid(),
+            "tid": e.get("tid", 0),
+            "args": dict(e.get("args") or {}),
+        }
+        if rec["ph"] == "X":
+            rec["dur"] = round(float(e.get("dur", 0.0)) * 1e6, 3)
+        if rec["ph"] == "i":
+            rec["s"] = "t"
+        if e.get("parent"):
+            rec["args"]["parent"] = e["parent"]
+        out.append(rec)
+    with open(path, "w") as f:
+        json.dump({"traceEvents": out, "displayTimeUnit": "ms"}, f,
+                  indent=1, default=str)
+        f.write("\n")
+    return path
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.observability.report",
+        description="Summarize a repro trace file; optionally export Chrome trace.",
+    )
+    ap.add_argument("trace", help="native trace (TraceBuffer.save) or Chrome JSON")
+    ap.add_argument("--chrome", default=None,
+                    help="write a Chrome traceEvents JSON here")
+    ap.add_argument("--top", type=int, default=20,
+                    help="span names to show in the duration table")
+    args = ap.parse_args(argv)
+
+    events, meta = load_events(args.trace)
+    dropped = meta.get("dropped", 0)
+    head = f"{args.trace} [{meta.get('format')}]"
+    if dropped:
+        head += f" — WARNING: {dropped} events dropped (buffer capacity)"
+    print(head)
+    print(summarize(events, top=args.top))
+    if args.chrome:
+        print(f"wrote Chrome trace to {export_chrome(events, args.chrome)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -41,7 +41,22 @@ from repro.core.execution import ClassShardedFn, ExecutionContext
 from repro.data.pipeline import AsymmetricBatcher, SyntheticLM
 from repro.distributed import sharding as SH
 from repro.models import model_zoo as Z
+from repro.observability import metrics as MET
+from repro.observability import trace as T
 from repro.optim import adamw as O
+
+_M = None
+
+
+def _metrics():
+    global _M
+    if _M is None:
+        _M = {
+            "steps": MET.counter("trainer_steps_total", "Training steps completed"),
+            "step_seconds": MET.histogram(
+                "trainer_step_seconds", "Train step wall time (incl. compile)"),
+        }
+    return _M
 
 
 class SimulatedFailure(RuntimeError):
@@ -390,6 +405,12 @@ class Trainer:
                     )
                 metrics = jax.tree.map(float, metrics)
                 dt = time.perf_counter() - t0
+                if T.enabled():
+                    m = _metrics()
+                    T.complete("trainer.step", t0, dt, cat="trainer",
+                               step=self.step, loss=metrics.get("loss"))
+                    m["steps"].inc()
+                    m["step_seconds"].observe(dt)
 
                 # Straggler feedback: measured (or injected) per-pod times
                 # re-derive the next step's chunk table (CA-DAS).

@@ -37,11 +37,29 @@ import time
 from typing import Optional, Sequence
 
 from repro.core.blocking import BlockConfig, TpuCoreSpec
+from repro.observability import metrics as MET
+from repro.observability import trace as T
 from repro.tuning import cache as C
 from repro.tuning import candidates as CAND
 from repro.tuning import measure as M
 
 log = logging.getLogger("repro.tuning.tune")
+
+_M = None
+
+
+def _obs_metrics():
+    global _M
+    if _M is None:
+        _M = {
+            "cache": MET.counter(
+                "tuning_cache_lookups_total", "Tuning-cache lookups by outcome",
+                labels=("result",)),
+            "candidate_seconds": MET.histogram(
+                "tuning_candidate_seconds",
+                "Per-candidate score from the timing backend (seconds)"),
+        }
+    return _M
 
 DTYPES = {"bf16": ("bfloat16", 2), "f32": ("float32", 4)}
 DRY_RUN_SHAPES = [(256, 256, 256), (512, 512, 512)]
@@ -119,9 +137,21 @@ def search_shape(
     analytical = cands[0]
 
     def _score(fn, cand: CAND.KernelCandidate) -> float:
+        t0 = time.perf_counter()
         if multi:
-            return fn(m, k, n, cand.cfg, kernel_backend=cand.backend)
-        return fn(m, k, n, cand.cfg)
+            t = fn(m, k, n, cand.cfg, kernel_backend=cand.backend)
+        else:
+            t = fn(m, k, n, cand.cfg)
+        # Telemetry covers the real scorer only (not the cheap prefilter):
+        # one span per timed candidate, wall = what the search paid,
+        # score_s = what the backend measured/estimated.
+        if fn is backend and T.enabled():
+            T.complete("tuning.candidate", t0, time.perf_counter() - t0,
+                       cat="tuning",
+                       block=[cand.cfg.bm, cand.cfg.bk, cand.cfg.bn],
+                       kernel_backend=cand.backend, score_s=t)
+            _obs_metrics()["candidate_seconds"].observe(t)
+        return t
 
     n_pruned = 0
     if prefilter is not None and len(cands) > coarse_keep + 1:
@@ -232,6 +262,8 @@ def tune_shapes(
         if cached is not None and not force:
             key = C.shape_bucket_key(spec.name, dtype_name, m, k, n)
             log.info("cache hit for %s — skipping search (use --force to redo)", key)
+            if T.enabled():
+                _obs_metrics()["cache"].labels(result="hit").inc()
             ana = CAND.analytical_config(m, k, n, spec=spec, dtype_bytes=dtype_bytes)
             # Report the times recorded at tuning, not fresh measurements —
             # re-timing a hit would defeat the point of the cache under the
@@ -262,17 +294,25 @@ def tune_shapes(
                 )
             )
             continue
+        if T.enabled():
+            _obs_metrics()["cache"].labels(result="miss").inc()
         t0 = time.perf_counter()
-        res = search_shape(
-            m, k, n,
-            spec=spec,
-            dtype_bytes=dtype_bytes,
-            backend=backend,
-            max_candidates=max_candidates,
-            prefilter=prefilter,
-            coarse_keep=coarse_keep,
-            kernel_backends=kernel_backends,
-        )
+        with T.span("tuning.search_shape", cat="tuning",
+                    shape=f"{m}x{k}x{n}", spec=spec.name,
+                    backend=backend_name) as sp:
+            res = search_shape(
+                m, k, n,
+                spec=spec,
+                dtype_bytes=dtype_bytes,
+                backend=backend,
+                max_candidates=max_candidates,
+                prefilter=prefilter,
+                coarse_keep=coarse_keep,
+                kernel_backends=kernel_backends,
+            )
+            sp.tag(n_candidates=res.n_candidates, n_pruned=res.n_pruned,
+                   best=[res.best.bm, res.best.bk, res.best.bn],
+                   best_backend=res.best_backend)
         log.info(
             "tuned %dx%dx%d: best=(%d,%d,%d)@%s %.3es vs analytical=(%d,%d,%d) "
             "%.3es (%.2fx, %d timed, %d pruned, %.1fs search)",
