@@ -123,9 +123,78 @@ def engine_rounds(cfg, params, prompts, gen_len, seq_cap, reps, *, mixed):
     }
 
 
+def paged_ab(cfg, params, gen_len, seq_cap, reps, *, slots_per_pod=8,
+             page_size=16):
+    """Dense vs paged engine A/B: high slot count, mixed prompt lengths.
+
+    Both sides run identical mixed-length request waves through a full
+    slot table.  The dense engine allocates ``n_slots × seq_cap`` KV
+    lanes up front; the paged engine's footprint is its page pool's
+    high-water mark (``peak_kv_bytes`` — phantom lanes included), which
+    at realistic request lengths is a small fraction of the dense
+    reservation.  ``memory_reduction`` is the headline ratio; tokens are
+    asserted bit-identical between the sides while we're here.
+    """
+
+    from repro.runtime.serving import ServingEngine
+
+    def side(paged):
+        asym = _mk_asym()
+        eng = ServingEngine(
+            cfg, params, asym, seq_cap=seq_cap, slots_per_pod=slots_per_pod,
+            class_sharded="off", paged=paged,
+            page_size=page_size if paged == "on" else None,
+        )
+        # One wave fills the whole table with heterogeneous prompts —
+        # every length admits in the same continuous-batching round.
+        plens = [4 + 2 * (i % 7) for i in range(eng.n_slots)]
+        prompts = rng.integers(0, cfg.vocab, (eng.n_slots, max(plens)),
+                               dtype=np.int32)
+        rates, prev_t, prev_s = [], 0.0, 0.0
+        for _ in range(reps):
+            for i, pl in enumerate(plens):
+                eng.submit(prompts[i][:pl], gen_len)
+            eng.run()
+            st = eng.stats
+            dtok, ds = st.tokens - prev_t, st.decode_s - prev_s
+            prev_t, prev_s = st.tokens, st.decode_s
+            rates.append(dtok / ds if ds else 0.0)
+        toks = {c.rid: c.tokens for c in eng.completions}
+        return eng, float(np.median(rates)), toks
+
+    # Re-seed per side so both submit identical prompt waves.
+    rng = np.random.default_rng(2)
+    dense_eng, dense_tps, dense_toks = side("off")
+    rng = np.random.default_rng(2)
+    paged_eng, paged_tps, paged_toks = side("on")
+    assert set(dense_toks) == set(paged_toks)
+    for rid in dense_toks:
+        assert np.array_equal(dense_toks[rid], paged_toks[rid]), (
+            f"paged tokens diverged from dense for rid={rid}"
+        )
+
+    dense_kv = dense_eng.kv_stats()
+    paged_kv = paged_eng.kv_stats()
+    reduction = dense_kv["kv_bytes"] / max(paged_kv["peak_kv_bytes"], 1)
+    return {
+        "slots": [paged_eng.n_pods, paged_eng.c_max],
+        "seq_cap": seq_cap,
+        "page_size": paged_kv["page_size"],
+        "dense": {"tokens_per_s": round(dense_tps, 1),
+                  "kv_bytes": dense_kv["kv_bytes"]},
+        "paged": {"tokens_per_s": round(paged_tps, 1),
+                  "peak_kv_bytes": paged_kv["peak_kv_bytes"],
+                  "peak_live_pages": paged_kv["peak_live_pages"],
+                  "phantom_pages": paged_kv["phantom_pages"],
+                  "admission_deferrals": paged_eng.stats.admission_deferrals},
+        "tokens_identical": True,
+        "memory_reduction": round(reduction, 2),
+    }
+
+
 def run(arch: str = "internlm2-1.8b", batch: int = 8, prompt_len: int = 8,
         gen_len: int = 48, seq_cap: int = 512, reps: int = 3,
-        mixed: bool = False, obs: bool = False) -> list[Row]:
+        mixed: bool = False, obs: bool = False, paged: bool = False) -> list[Row]:
     """Both sides on identical prompts/layout; writes ``BENCH_serving.json``.
 
     ``seq_cap`` is deliberately larger than prompt+gen: the decode-state
@@ -203,6 +272,17 @@ def run(arch: str = "internlm2-1.8b", batch: int = 8, prompt_len: int = 8,
         rows.append(Row("serve_engine_traced", 1e6 / max(obs_tps, 1e-9),
                         f"tokens_per_s={obs_tps:.1f} "
                         f"overhead_pct={100.0 * overhead:.1f}"))
+    if paged:
+        # The paged-KV A/B: memory proportional to live tokens instead of
+        # slots × seq_cap, tokens bit-identical.  Gated on the memory side
+        # (--check asserts memory_reduction >= 2); tokens/s informational.
+        ab = paged_ab(cfg, params, gen_len, seq_cap, reps)
+        record["paged_ab"] = ab
+        rows.append(Row(
+            "serve_engine_paged",
+            1e6 / max(ab["paged"]["tokens_per_s"], 1e-9),
+            f"tokens_per_s={ab['paged']['tokens_per_s']:.1f} "
+            f"memory_reduction={ab['memory_reduction']:.2f}"))
     path = write_json("BENCH_serving.json", [record], bench="serving",
                       arch=cfg.name)
     print(f"wrote {path}")
@@ -222,17 +302,29 @@ def main():
     ap.add_argument("--obs", action="store_true",
                     help="add the informational tracing-enabled engine row "
                          "(measures the observability enabled-path overhead)")
+    ap.add_argument("--paged", action="store_true",
+                    help="add the paged-vs-dense KV A/B rows (high slot "
+                         "count, mixed lengths, memory_reduction field)")
     ap.add_argument("--check", action="store_true",
-                    help="exit non-zero unless the engine is strictly faster")
+                    help="exit non-zero unless the engine is strictly faster "
+                         "(and, with --paged, the paged pool at least halves "
+                         "peak KV memory)")
     args = ap.parse_args()
     rows = run(args.arch, args.batch, args.prompt_len, args.gen_len,
-               args.seq_cap, args.reps, args.mixed, args.obs)
+               args.seq_cap, args.reps, args.mixed, args.obs, args.paged)
     for r in rows:
         print(f"{r.name},{r.us_per_call:.1f},{r.derived}")
     if args.check:
         speed = float(rows[2].derived.split("=")[1])
         if speed <= 1.0:
             raise SystemExit(f"persistent engine not faster: speedup={speed}")
+        if args.paged:
+            paged_row = next(r for r in rows if r.name == "serve_engine_paged")
+            red = float(paged_row.derived.split("memory_reduction=")[1])
+            if red < 2.0:
+                raise SystemExit(
+                    f"paged KV pool reduction below 2x: {red}"
+                )
 
 
 if __name__ == "__main__":

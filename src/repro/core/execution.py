@@ -97,18 +97,72 @@ def _pallas_lean_interpret_gemm(a2, b, config, out_dtype):
     return gemm_pallas_lean(a2, b, config, out_dtype=out_dtype, interpret=True)
 
 
-# name -> (a2, b, config, out_dtype) -> 2-D result.  The keys are the only
-# backend names the stack accepts; ``"auto"`` is a request resolved by
-# :func:`resolve_backend`, never a table entry.
+def _paged_attn_xla(q, pages_k, pages_v, page_table, pos):
+    from repro.kernels.paged_attention import paged_attention_xla
+
+    return paged_attention_xla(q, pages_k, pages_v, page_table, pos)
+
+
+def _paged_attn_pallas(q, pages_k, pages_v, page_table, pos):
+    from repro.kernels.paged_attention import paged_attention_pallas
+
+    return paged_attention_pallas(q, pages_k, pages_v, page_table, pos)
+
+
+def _paged_attn_pallas_interpret(q, pages_k, pages_v, page_table, pos):
+    from repro.kernels.paged_attention import paged_attention_pallas
+
+    return paged_attention_pallas(
+        q, pages_k, pages_v, page_table, pos, interpret=True
+    )
+
+
+# name -> kernel callable.  The keys are the only backend names the stack
+# accepts; ``"auto"`` is a request resolved by :func:`resolve_backend` /
+# :func:`resolve_paged_attn_backend`, never a table entry.  Entries span
+# more than one *op family* now (GEMM micro-kernels take
+# ``(a2, b, config, out_dtype)``; paged-attention decode kernels take
+# ``(q, pages_k, pages_v, page_table, pos)``) — :data:`BACKEND_OPS` tags
+# each name with its family and the dispatch funnels validate the tag, so
+# a tree or CLI flag can never route a GEMM into an attention kernel.
 BACKENDS: dict[str, Callable] = {
     "xla": _xla_gemm,
     "pallas": _pallas_gemm,
     "pallas_interpret": _pallas_interpret_gemm,
     "pallas_lean": _pallas_lean_gemm,
     "pallas_lean_interpret": _pallas_lean_interpret_gemm,
+    "paged_attn_xla": _paged_attn_xla,
+    "paged_attn_pallas": _paged_attn_pallas,
+    "paged_attn_pallas_interpret": _paged_attn_pallas_interpret,
+}
+
+# name -> op family ("gemm" | "paged_attn").
+BACKEND_OPS: dict[str, str] = {
+    "xla": "gemm",
+    "pallas": "gemm",
+    "pallas_interpret": "gemm",
+    "pallas_lean": "gemm",
+    "pallas_lean_interpret": "gemm",
+    "paged_attn_xla": "paged_attn",
+    "paged_attn_pallas": "paged_attn",
+    "paged_attn_pallas_interpret": "paged_attn",
 }
 
 BACKEND_NAMES: tuple[str, ...] = tuple(BACKENDS)
+
+# The GEMM sub-vocabulary — what control trees, the tuner, and the
+# ``--backend`` CLI flags may name.
+GEMM_BACKEND_NAMES: tuple[str, ...] = tuple(
+    n for n, op in BACKEND_OPS.items() if op == "gemm"
+)
+
+
+def backend_op(name: str) -> str:
+    """The op family of a dispatch-table entry (validating the name)."""
+
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}")
+    return BACKEND_OPS[name]
 
 # Compiled backend -> its CPU-runnable interpret twin (identity for
 # backends that already run anywhere).  The parity harness walks BACKENDS
@@ -120,6 +174,9 @@ INTERPRET_TWIN: dict[str, str] = {
     "pallas_interpret": "pallas_interpret",
     "pallas_lean": "pallas_lean_interpret",
     "pallas_lean_interpret": "pallas_lean_interpret",
+    "paged_attn_xla": "paged_attn_xla",
+    "paged_attn_pallas": "paged_attn_pallas_interpret",
+    "paged_attn_pallas_interpret": "paged_attn_pallas_interpret",
 }
 
 # Pipelined backend -> the VMEM-lean variant of the same execution family
@@ -193,12 +250,34 @@ def on_tpu() -> bool:
 
 
 def resolve_backend(name: str) -> str:
-    """Collapse ``"auto"`` to a concrete table entry; validate the rest."""
+    """Collapse a GEMM ``"auto"`` to a concrete table entry; validate the rest.
+
+    GEMM callers only (control trees, the ops funnel, dry-run): a name
+    from another op family is rejected here, at resolution time, so it can
+    never reach a kernel with the wrong signature.
+    """
 
     if name == "auto":
         return "pallas" if on_tpu() else "xla"
     if name not in BACKENDS:
         raise ValueError(f"unknown backend {name!r}")
+    if BACKEND_OPS[name] != "gemm":
+        raise ValueError(
+            f"backend {name!r} is a {BACKEND_OPS[name]!r} kernel, not a GEMM"
+        )
+    return name
+
+
+def resolve_paged_attn_backend(name: str) -> str:
+    """Collapse a paged-attention ``"auto"``; validate the op family."""
+
+    if name == "auto":
+        return "paged_attn_pallas" if on_tpu() else "paged_attn_xla"
+    if backend_op(name) != "paged_attn":
+        raise ValueError(
+            f"backend {name!r} is a {BACKEND_OPS[name]!r} kernel, not a "
+            f"paged-attention kernel"
+        )
     return name
 
 
@@ -207,6 +286,21 @@ def dispatch_gemm(a2, b, *, config=None, backend: str = "auto", out_dtype=None):
 
     out_dtype = out_dtype or a2.dtype
     return BACKENDS[resolve_backend(backend)](a2, b, config, out_dtype)
+
+
+def dispatch_paged_attention(
+    q, pages_k, pages_v, page_table, pos, *, backend: str = "auto"
+):
+    """Route a paged decode-attention call through the backend table.
+
+    The decode path's funnel: ``layers.decode_attention_paged`` calls this
+    per layer, so the paged kernels live in the same vocabulary — and the
+    same parity harness — as the GEMM micro-kernels.
+    """
+
+    return BACKENDS[resolve_paged_attn_backend(backend)](
+        q, pages_k, pages_v, page_table, pos
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -712,6 +806,8 @@ __all__ = [
     "Backend",
     "BACKENDS",
     "BACKEND_NAMES",
+    "BACKEND_OPS",
+    "GEMM_BACKEND_NAMES",
     "INTERPRET_TWIN",
     "LEAN_VARIANTS",
     "ClassShardedFn",
@@ -719,17 +815,20 @@ __all__ = [
     "ShardProvenance",
     "align_backend_family",
     "backend_double_buffers",
+    "backend_op",
     "class_sharded",
     "compat_shard_map",
     "context_for_tree",
     "current_context",
     "default_context",
     "dispatch_gemm",
+    "dispatch_paged_attention",
     "dtype_name_for_bytes",
     "interpret_twin",
     "on_tpu",
     "resolve_backend",
     "resolve_block_config",
+    "resolve_paged_attn_backend",
     "tuned_block_config",
     "tuned_kernel_backend",
 ]

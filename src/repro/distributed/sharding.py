@@ -226,19 +226,24 @@ def pod_state_specs(state_tree, *, axis: str = "pod", dim: int = 1):
     return jax.tree.map(f, state_tree)
 
 
-def pod_decode_specs(state_spec, *, axis: str = "pod"):
+def pod_decode_specs(state_spec, *, axis: str = "pod",
+                     batch_keys: Sequence[str] = ("tokens",)):
     """(in_specs, out_specs) for a slot-table decode step over the pod axis.
 
-    The serving engine's step is ``decode(params, {"tokens": (B,1)},
-    state, pos)`` with ``B = n_pods × c_max`` pod-major slots: params
-    replicated, tokens/positions sharded one slot region per pod, the
-    decode state sharded on its batch (slot) dim.  The same specs serve
-    the engine's bulk prefill (tokens are then ``(B, P)`` — the leading
-    slot dim still shards over pods).
+    The serving engine's step is ``decode(params, batch, state, pos)``
+    with ``B = n_pods × c_max`` pod-major slots: params replicated, every
+    batch tensor (``"tokens"`` (B,1), and for the paged engine
+    ``"page_table"`` (B,W) and ``"live"`` (B,)) sharded one slot region
+    per pod, positions likewise, and the decode state sharded on its
+    batch dim — the slot dim for dense caches, the *page* dim for the
+    paged arena (``pod_state_specs`` dim 1 covers both, since the arena
+    is pod-partitioned on pages exactly as the dense cache is on slots).
+    The same specs serve the engine's bulk prefill (tokens are then
+    ``(B, P)`` — the leading slot dim still shards over pods).
     """
 
     sspecs = pod_state_specs(state_spec, axis=axis)
-    in_specs = (P(), {"tokens": P(axis)}, sspecs, P(axis))
+    in_specs = (P(), {k: P(axis) for k in batch_keys}, sspecs, P(axis))
     out_specs = (P(axis), sspecs)
     return in_specs, out_specs
 

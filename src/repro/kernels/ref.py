@@ -112,4 +112,45 @@ def attention_ref(
     return o.astype(q.dtype)
 
 
-__all__ = ["gemm_ref", "blocked_gemm_ref", "blocked_gemm_tpu_ref", "attention_ref"]
+def paged_attention_ref(
+    q: jnp.ndarray,
+    pages_k: jnp.ndarray,
+    pages_v: jnp.ndarray,
+    page_table: jnp.ndarray,
+    pos: jnp.ndarray,
+) -> jnp.ndarray:
+    """Paged single-token decode-attention oracle (fp32 end to end).
+
+    Deliberately *not* the production op order: ungrouped fp32 einsums
+    over an eagerly gathered dense view, so both the XLA gather route and
+    the online-softmax Pallas kernel are checked against independent
+    arithmetic.  Shapes as in ``kernels.paged_attention``: ``q`` is
+    ``(B, Hq, Dh)``, the arenas ``(P, ps, Hkv, Dh)``, the table
+    ``(B, W)`` with ``W·ps`` the logical cache length, ``pos`` ``(B,)``.
+    """
+
+    b, hq, d = q.shape
+    p, ps, hkv, _ = pages_k.shape
+    w = page_table.shape[1]
+    s_cache = w * ps
+    g = hq // hkv
+    idx = jnp.clip(page_table, 0, p - 1)
+    view_k = pages_k[idx].reshape(b, s_cache, hkv, d).astype(jnp.float32)
+    view_v = pages_v[idx].reshape(b, s_cache, hkv, d).astype(jnp.float32)
+    qf = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qf, view_k) / np.sqrt(d)
+    limit = jnp.minimum(jnp.asarray(pos, jnp.int32)[:, None] + 1, s_cache)
+    valid = jnp.arange(s_cache)[None, :] < limit
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", pr, view_v)
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+__all__ = [
+    "gemm_ref",
+    "blocked_gemm_ref",
+    "blocked_gemm_tpu_ref",
+    "attention_ref",
+    "paged_attention_ref",
+]

@@ -303,10 +303,10 @@ def main():
                          "intra-pod devices replicate their pod's program — "
                          "the record shows the mixed program structure, not "
                          "per-device memory at production intra-pod sharding")
-    from repro.core.execution import BACKEND_NAMES
+    from repro.core.execution import GEMM_BACKEND_NAMES
 
     ap.add_argument("--backend", default="auto",
-                    choices=["auto"] + sorted(BACKEND_NAMES),
+                    choices=["auto"] + sorted(GEMM_BACKEND_NAMES),
                     help="micro-kernel dispatch entry the cells lower with "
                          "(e.g. pallas_lean for the VMEM-lean variant; auto "
                          "probes the platform — xla off-TPU).  Pallas "

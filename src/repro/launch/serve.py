@@ -167,6 +167,27 @@ def _one_shot(cfg, params, asym, prompts, args, seq_cap):
     return out, timings, device_class, exec_backend, shard_classes, None
 
 
+def truncate_at_eos(out: np.ndarray, prompt_len: int, eos_id: int):
+    """EOS-aware stop for the one-shot path's dense output.
+
+    The one-shot loop always decodes ``gen_len`` steps; with an EOS id the
+    generated region of each row is cut after its first EOS (the EOS token
+    itself is kept, the tail zeroed — matching the engine's per-row
+    completions).  Returns ``(out, n_eos, n_budget)``.
+    """
+
+    out = out.copy()
+    gen = out[:, prompt_len:]
+    hit = gen == eos_id
+    n_eos = 0
+    for r in range(out.shape[0]):
+        idx = np.nonzero(hit[r])[0]
+        if len(idx):
+            gen[r, idx[0] + 1:] = 0
+            n_eos += 1
+    return out, n_eos, out.shape[0] - n_eos
+
+
 def _engine(cfg, params, asym, prompts, args, seq_cap):
     """The persistent slot-table engine path (the default)."""
 
@@ -179,6 +200,10 @@ def _engine(cfg, params, asym, prompts, args, seq_cap):
         seq_cap=seq_cap,
         slots_per_pod=args.slots_per_pod or layout.c_max,
         class_sharded=args.class_sharded,
+        paged=args.paged,
+        page_size=args.page_size,
+        pool_pages=args.pool_pages,
+        eos_id=args.eos_id,
     )
     out = eng.generate(prompts, args.gen_len)
     st = eng.stats
@@ -196,7 +221,8 @@ def _engine(cfg, params, asym, prompts, args, seq_cap):
         ctx = asym.execution_context()
         shard_classes = None
         device_class, exec_backend = ctx.device_class, ctx.backend()
-    engine_stats = {"slots": [eng.n_pods, eng.c_max], **st.snapshot()}
+    engine_stats = {"slots": [eng.n_pods, eng.c_max], **st.snapshot(),
+                    "kv_pool": eng.kv_stats()}
     return out, timings, device_class, exec_backend, shard_classes, engine_stats
 
 
@@ -219,6 +245,20 @@ def main():
                          "per-token jit dispatches (comparison baseline)")
     ap.add_argument("--slots-per-pod", type=int, default=None,
                     help="engine slot-region size (default: the layout's c_max)")
+    ap.add_argument("--paged", default="off", choices=["auto", "on", "off"],
+                    help="engine KV storage: paged page-pool instead of dense "
+                         "per-slot lanes (memory proportional to live tokens; "
+                         "bit-identical tokens)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="tokens per KV page (default: derived from the "
+                         "classes' tuned block configs)")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="physical KV pages per pod partition (default: "
+                         "full-occupancy capacity — never defers)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="stop a request at this token id (engine: the slot "
+                         "retires and its pages free mid-stream; one-shot: "
+                         "rows are truncated after their first EOS)")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="enable observability and write the trace here "
                          "(native format; summarize / export Chrome trace "
@@ -252,6 +292,8 @@ def main():
         )
     if not args.one_shot and args.device_class is not None:
         raise SystemExit("--device-class applies to the --one-shot path only")
+    if args.one_shot and args.paged != "off":
+        raise SystemExit("--paged applies to the engine path only")
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len), dtype=np.int32)
@@ -263,6 +305,14 @@ def main():
         cfg, params, asym, prompts, args, seq_cap
     )
     dt = time.time() - t0
+    stop_counts = None
+    if args.eos_id is not None:
+        if engine_stats is not None:
+            stop_counts = {"eos": engine_stats["completed_eos"],
+                           "budget": engine_stats["completed_budget"]}
+        else:
+            out, n_eos, n_budget = truncate_at_eos(out, args.prompt_len, args.eos_id)
+            stop_counts = {"eos": n_eos, "budget": n_budget}
     # Steady-state throughput: warmup/compile excluded.  The one-shot path
     # used to fold jit compile time into tokens_per_s, which made every
     # comparison against it meaningless on the first run.  The engine
@@ -284,6 +334,8 @@ def main():
         "tokens_per_s": round(steady, 1),
         "sample": out[0, -8:].tolist(),
     }
+    if stop_counts is not None:
+        summary["stop_counts"] = stop_counts
     if engine_stats is not None:
         summary["engine"] = engine_stats
     if args.trace or args.metrics:

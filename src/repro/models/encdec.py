@@ -174,11 +174,13 @@ def decode_step(params, cfg: ArchConfig, batch, state, pos):
         x = x + pe[None, None].astype(L.COMPUTE_DTYPE)
     acfg = _acfg(cfg, causal=True)
     xcfg = _acfg(cfg, causal=False)
+    live = batch.get("live")  # (B,) bool lane mask; None → all live
 
     def body(x, inputs):
         p, ck, cv, xk, xv = inputs
         h, (ck, cv) = L.decode_attention(
-            p["attn"], L.layer_norm(x, p["ln1_w"], p["ln1_b"]), acfg, ck, cv, pos
+            p["attn"], L.layer_norm(x, p["ln1_w"], p["ln1_b"]), acfg, ck, cv, pos,
+            live=live,
         )
         x = x + h
         h = L.cross_attention(

@@ -221,7 +221,7 @@ def apply_attention(p, x, cfg: AttnConfig, *, positions=None):
     return ops.linear(o, p["wo"].astype(COMPUTE_DTYPE)), (k, v)
 
 
-def decode_attention(p, x, cfg: AttnConfig, cache_k, cache_v, pos):
+def decode_attention(p, x, cfg: AttnConfig, cache_k, cache_v, pos, *, live=None):
     """Single-token decode against a (ring or linear) KV cache.
 
     x: (B, 1, D); cache_k/v: (B, S_cache, Hkv, Dh); pos: int32 — the
@@ -237,7 +237,18 @@ def decode_attention(p, x, cfg: AttnConfig, cache_k, cache_v, pos):
     vector-position step is bit-identical to the scalar-position path
     (asserted in tests/test_serving.py).  A vector position past the cache
     length simply writes nothing (the one-hot hits no slot), so retired
-    slots can keep aging harmlessly until they are re-admitted.
+    slots can keep aging harmlessly until they are re-admitted.  (The
+    scalar path's ``dynamic_update_slice`` *clamps* instead of dropping —
+    scalar callers never run phantom lanes, so the distinction is moot
+    there.)
+
+    ``live`` (optional, ``(B,)`` bool) marks rows whose attention output
+    is real; dead rows (retired-but-not-refreshed phantom lanes) have
+    their attention output zeroed before the output projection so their
+    row content is engine-defined (identical between the dense and paged
+    engines) rather than whatever their stale cache produces.  Masked
+    lanes never influence *other* rows either way — every op here is
+    row-local — so ``live=None`` keeps the historical output bit-for-bit.
     """
 
     b = x.shape[0]
@@ -277,7 +288,11 @@ def decode_attention(p, x, cfg: AttnConfig, cache_k, cache_v, pos):
             # ring buffer: all slots valid once wrapped
             valid = (k_idx[None, :] <= slot[:, None]) | (pos[:, None] >= s_cache)
         else:
-            valid = k_idx[None, :] <= pos[:, None]
+            # Clamp before comparing: a phantom lane aged past the cache
+            # (pos >= s_cache) must saturate to "whole cache valid", never
+            # overflow-wrap the comparison.  (Equivalent for every
+            # in-range pos — k_idx stays < s_cache — but explicit.)
+            valid = k_idx[None, :] <= jnp.minimum(pos[:, None], s_cache - 1)
         s = jnp.where(valid[:, None, None, None, :], s, -1e30)
     else:
         if cfg.window is not None:
@@ -290,8 +305,65 @@ def decode_attention(p, x, cfg: AttnConfig, cache_k, cache_v, pos):
         "bhgqs,bshd->bqhgd", pattn, cache_v.astype(COMPUTE_DTYPE),
         preferred_element_type=jnp.float32,
     )
+    if live is not None:
+        o = jnp.where(live[:, None, None, None, None], o, 0.0)
     o = o.astype(x.dtype).reshape(b, 1, cfg.n_heads * cfg.d_head)
     return ops.linear(o, p["wo"].astype(COMPUTE_DTYPE)), (cache_k, cache_v)
+
+
+def decode_attention_paged(
+    p, x, cfg: AttnConfig, pages_k, pages_v, page_table, pos, *,
+    live=None, backend: str = "auto",
+):
+    """Single-token decode against a *paged* KV pool (one layer's arena).
+
+    x: (B, 1, D); pages_k/v: (P, page_size, Hkv, Dh) — the shared page
+    arena; page_table: (B, W) int32 — each row's pages, where
+    ``W · page_size`` is the logical cache length ``S_cache``; pos: (B,)
+    int32 per-row absolute positions (always per-slot — the paged path
+    only exists for the serving engine).
+
+    Write side mirrors the dense per-slot scatter: the new K/V lands at
+    logical slot ``pos % S_cache`` (ring) / ``pos`` (linear) inside the
+    row's page for that slot; rows whose table entry is unallocated
+    (SENTINEL) or whose linear position is past the cache write nothing
+    (``mode="drop"`` — same semantics as the dense phantom-lane drop).
+    Rows sharing a page (the engine's shared phantom lane) write
+    *identical* values by construction, so scatter order cannot matter.
+
+    Read side routes through ``execution.dispatch_paged_attention``: the
+    XLA gather route reproduces the dense arithmetic bit-for-bit; the
+    Pallas route streams pages with an online softmax (tolerance-tested).
+    ``live`` as in :func:`decode_attention`.
+    """
+
+    from repro.core.execution import dispatch_paged_attention
+
+    b = x.shape[0]
+    n_pages, page_size = pages_k.shape[0], pages_k.shape[1]
+    w = page_table.shape[1]
+    s_cache = w * page_size
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k, v = _qkv(p, x, cfg, pos[:, None])
+
+    slot = pos % s_cache if cfg.window is not None else pos
+    rows = jnp.arange(b)
+    page = page_table[rows, jnp.clip(slot // page_size, 0, w - 1)]
+    # Linear positions past the cache write nothing, as on the dense path
+    # (any out-of-range page — this marker or a SENTINEL table entry —
+    # makes the scatter drop the row).
+    page = jnp.where(slot < s_cache, page, jnp.int32(n_pages))
+    off = slot % page_size
+    pages_k = pages_k.at[page, off].set(k[:, 0].astype(pages_k.dtype), mode="drop")
+    pages_v = pages_v.at[page, off].set(v[:, 0].astype(pages_v.dtype), mode="drop")
+
+    o = dispatch_paged_attention(
+        q[:, 0], pages_k, pages_v, page_table, pos, backend=backend
+    )  # (B, Hq, Dh)
+    if live is not None:
+        o = jnp.where(live[:, None, None], o, jnp.zeros((), o.dtype))
+    o = o.reshape(b, 1, cfg.n_heads * cfg.d_head)
+    return ops.linear(o, p["wo"].astype(COMPUTE_DTYPE)), (pages_k, pages_v)
 
 
 def cross_attention(p, x, enc_k, enc_v, cfg: AttnConfig):
@@ -385,6 +457,7 @@ __all__ = [
     "init_attention",
     "apply_attention",
     "decode_attention",
+    "decode_attention_paged",
     "cross_attention",
     "init_cross_kv",
     "encode_cross_kv",

@@ -88,25 +88,46 @@ def bulk_prefill_from_decode(decode_fn):
     scalar, or a (B,) vector of per-slot positions.  Accepts the wrapped
     ``decode_fn`` so callers can prefill through a class-sharded mixed
     step (``AsymmetricMesh.class_sharded``) as well as the plain zoo fn.
+
+    Every batch key besides ``"tokens"`` (``"page_table"``, ``"live"``)
+    is passed through to each decode step unchanged — the paged serving
+    path prefills through the same page tables it decodes through.
+
+    ``plens`` (optional, (B,) int32) supports **mixed-length prompts in
+    one fused call**: prompts are right-padded to the batch's max length,
+    every row runs all padded steps (pad writes land past each row's
+    live positions, where the decode mask already hides them — the same
+    argument that makes stale cache content invisible), and each row's
+    *returned* logits are the ones from its own last real token
+    ``t == plens[row] - 1`` instead of the final padded step.  ``None``
+    keeps the single-length behavior bit-for-bit.
     """
 
-    def f(params, batch, state, pos0):
+    def f(params, batch, state, pos0, plens=None):
         if "tokens" not in batch:
             raise ValueError("bulk prefill needs a token-in batch ({'tokens': (B,P)})")
         tokens = batch["tokens"]
+        extras = {k: v for k, v in batch.items() if k != "tokens"}
         pos0 = jnp.asarray(pos0, jnp.int32)
         plen = tokens.shape[1]
 
         def step(state, tok, p):
-            return decode_fn(params, {"tokens": tok}, state, p)
+            return decode_fn(params, dict(extras, tokens=tok), state, p)
+
+        def select(sel, lg, t):
+            if plens is None:
+                return lg
+            keep = (jnp.asarray(plens, jnp.int32) - 1 == t)[:, None, None]
+            return jnp.where(keep, lg, sel)
 
         logits, state = step(state, tokens[:, :1], pos0)
+        logits = select(logits, logits, 0)
         if plen > 1:
             def body(carry, t):
-                st, _ = carry
+                st, sel = carry
                 tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
                 lg, st = step(st, tok, pos0 + t)
-                return (st, lg), None
+                return (st, select(sel, lg, t)), None
 
             (state, logits), _ = jax.lax.scan(
                 body, (state, logits), jnp.arange(1, plen)
@@ -130,6 +151,14 @@ def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int):
     if cfg.family == "encdec":
         return E.init_decode_state(None, cfg, batch, seq_len)
     return T.init_decode_state(cfg, batch, seq_len)
+
+
+def init_decode_state_paged(cfg: ArchConfig, n_pages: int, page_size: int):
+    """Paged decode cache (pure KV-cache families only; see transformer)."""
+
+    if cfg.family == "encdec":
+        raise ValueError("paged KV state does not cover the encdec cross-KV cache")
+    return T.init_decode_state_paged(cfg, n_pages, page_size)
 
 
 def batch_spec(cfg: ArchConfig, shape: ShapeSpec) -> dict:
@@ -165,6 +194,7 @@ __all__ = [
     "bulk_prefill_from_decode",
     "make_decode_fn",
     "init_decode_state",
+    "init_decode_state_paged",
     "decode_state_spec",
     "batch_spec",
 ]

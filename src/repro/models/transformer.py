@@ -264,12 +264,38 @@ def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int):
     return state
 
 
-def _decode_attn_block(p, x, cfg, ck, cv, pos, *, with_moe: bool, window=None):
+def init_decode_state_paged(cfg: ArchConfig, n_pages: int, page_size: int):
+    """Paged decode cache: one shared page arena per layer, no batch dim.
+
+    Replaces the dense ``(L, B, S_cache, Hkv, Dh)`` lanes with
+    ``(L, n_pages, page_size, Hkv, Dh)`` arenas; rows find their cache
+    through the ``batch["page_table"]`` passed to :func:`decode_step`.
+    Only the pure KV-cache families page — recurrent (Mamba2) state is
+    constant-size per slot already, and the hybrid/encdec caches carry
+    extra leaves the page pool does not cover.
+    """
+
+    kind = block_kind(cfg)
+    if kind == "mamba" or cfg.shared_attn_every:
+        raise ValueError(
+            f"paged KV state requires a pure KV-cache family, not "
+            f"{cfg.family!r} (recurrent state has no pages to allocate)"
+        )
+    kv_shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "pages_k": jnp.zeros(kv_shape, L.COMPUTE_DTYPE),
+        "pages_v": jnp.zeros(kv_shape, L.COMPUTE_DTYPE),
+    }
+
+
+def _decode_attn_block(p, x, cfg, ck, cv, pos, *, with_moe: bool, window=None,
+                       live=None):
     acfg = attn_config(cfg)
     if window is not None:
         acfg = L.AttnConfig(**{**acfg.__dict__, "window": window})
     h, (ck, cv) = L.decode_attention(
-        p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), acfg, ck, cv, pos
+        p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), acfg, ck, cv, pos,
+        live=live,
     )
     x = x + h
     if with_moe:
@@ -279,6 +305,21 @@ def _decode_attn_block(p, x, cfg, ck, cv, pos, *, with_moe: bool, window=None):
     return x + h, ck, cv
 
 
+def _decode_attn_block_paged(p, x, cfg, pk, pv, table, pos, *, with_moe: bool,
+                             live=None):
+    acfg = attn_config(cfg)
+    h, (pk, pv) = L.decode_attention_paged(
+        p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps), acfg, pk, pv,
+        table, pos, live=live,
+    )
+    x = x + h
+    if with_moe:
+        h, _ = M.apply_moe(p["moe"], L.rms_norm(x, p["ln2"], cfg.norm_eps), cfg.moe)
+    else:
+        h = L.apply_glu(p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x + h, pk, pv
+
+
 def decode_step(params, cfg: ArchConfig, batch, state, pos):
     """One-token serve step.
 
@@ -286,6 +327,14 @@ def decode_step(params, cfg: ArchConfig, batch, state, pos):
     position — a scalar (static batching) or a (B,) vector of per-row
     positions (slot-table serving; see layers.decode_attention).  Returns
     (logits (B,1,V), new_state).
+
+    Two optional batch keys extend the serving contract:
+      * ``"page_table"`` (B, W) int32 — required when ``state`` is the
+        paged cache from :func:`init_decode_state_paged` (detected by its
+        ``"pages_k"`` leaf); rows then read/write KV through the page
+        arena (layers.decode_attention_paged).
+      * ``"live"`` (B,) bool — rows whose attention output is real;
+        absent means all live (bit-identical to the historical step).
     """
 
     x = embed_tokens(params, cfg, batch)
@@ -328,14 +377,34 @@ def decode_step(params, cfg: ArchConfig, batch, state, pos):
             new_state = {"mamba": st}
     else:
         with_moe = kind == "attn_moe"
+        live = batch.get("live")
 
-        def body(x, inputs):
-            p, ck, cv = inputs
-            x, ck, cv = _decode_attn_block(p, x, cfg, ck, cv, pos, with_moe=with_moe)
-            return x, (ck, cv)
+        if "pages_k" in state:
+            table = batch["page_table"]
 
-        x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], state["k"], state["v"]))
-        new_state = {"k": ks, "v": vs}
+            def body(x, inputs):
+                p, pk, pv = inputs
+                x, pk, pv = _decode_attn_block_paged(
+                    p, x, cfg, pk, pv, table, pos, with_moe=with_moe, live=live
+                )
+                return x, (pk, pv)
+
+            x, (pks, pvs) = jax.lax.scan(
+                body, x, (params["blocks"], state["pages_k"], state["pages_v"])
+            )
+            new_state = {"pages_k": pks, "pages_v": pvs}
+        else:
+            def body(x, inputs):
+                p, ck, cv = inputs
+                x, ck, cv = _decode_attn_block(
+                    p, x, cfg, ck, cv, pos, with_moe=with_moe, live=live
+                )
+                return x, (ck, cv)
+
+            x, (ks, vs) = jax.lax.scan(
+                body, x, (params["blocks"], state["k"], state["v"])
+            )
+            new_state = {"k": ks, "v": vs}
 
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     logits = ops.gemm(x, params["lm_head"].astype(L.COMPUTE_DTYPE))
@@ -359,5 +428,6 @@ __all__ = [
     "decode_step",
     "prefill",
     "init_decode_state",
+    "init_decode_state_paged",
     "cache_len",
 ]

@@ -85,7 +85,42 @@ def summarize(events: list[dict], *, top: int = 20) -> str:
         lines += ["", "instants: " + ", ".join(
             f"{n}×{c}" for n, c in sorted(counts.items())
         )]
+
+    kv = kv_pool_rollup(instants)
+    if kv is not None:
+        lines += ["", (
+            "kv page pool: peak {peak_live_pages} pages live "
+            "({allocs} allocs / {frees} frees, {pages_allocated} pages in / "
+            "{pages_freed} out, final live {final_live_pages})"
+        ).format(**kv)]
     return "\n".join(lines)
+
+
+def kv_pool_rollup(instants: list[dict]) -> Optional[dict]:
+    """Peak page occupancy from ``engine.page_alloc``/``engine.page_free``.
+
+    Each instant carries the pool's ``pages_live`` *after* the event, so
+    the peak over the stream is the pool's true high-water mark (matching
+    ``PagePool.peak_live`` when the trace covers the engine's lifetime).
+    Returns None when the trace has no page events.
+    """
+
+    allocs = [e for e in instants if e.get("name") == "engine.page_alloc"]
+    frees = [e for e in instants if e.get("name") == "engine.page_free"]
+    if not allocs and not frees:
+        return None
+    events = sorted(allocs + frees, key=lambda e: float(e.get("ts", 0.0)))
+    live = [int((e.get("args") or {}).get("pages_live", 0)) for e in events]
+    return {
+        "allocs": len(allocs),
+        "frees": len(frees),
+        "pages_allocated": sum(
+            int((e.get("args") or {}).get("pages", 0)) for e in allocs),
+        "pages_freed": sum(
+            int((e.get("args") or {}).get("pages", 0)) for e in frees),
+        "peak_live_pages": max(live) if live else 0,
+        "final_live_pages": live[-1] if live else 0,
+    }
 
 
 def export_chrome(events: list[dict], path: str) -> str:

@@ -9,13 +9,30 @@ chunk table on every generate call and replays prompts token-by-token
 through per-call jit dispatches, each of which copies the full decode
 state.  This engine amortizes all of it:
 
-  * **Fixed pod-major slot table** — ``n_pods × c_max`` decode slots,
-    each slot one KV-cache lane of a decode state allocated **once**.
+  * **Fixed pod-major slot table** — ``n_pods × c_max`` decode slots.
     Pod *i* owns the contiguous slot region ``[i·c_max, (i+1)·c_max)``;
     on a multi-class mesh the jitted step runs class-sharded
     (``AsymmetricMesh.class_sharded``), so each pod decodes its region
     under its own class's control tree — two micro-kernel programs in one
     SPMD step, ``ShardProvenance``-proven, exactly as in training.
+  * **Paged KV pool** (``paged="auto"|"on"``) — instead of one dense
+    ``seq_cap`` KV lane per slot, the engine owns a fixed arena of
+    fixed-size pages (:mod:`repro.runtime.paging`) and each slot holds a
+    page-index list; memory scales with live tokens.  Pages are reserved
+    all-or-nothing at admission (``ceil(min(prompt+max_new, s_cache) /
+    page_size)`` — no mid-stream exhaustion; admission defers instead)
+    and returned the moment a slot retires, EOS- or budget-stopped.  The
+    page size is a per-class tunable defaulting from the classes' tuned
+    block configs (min ``bm``), the granularity the paper's §3.3
+    configuration step already derived for the memory hierarchy.
+  * **Continuous batching** — one admission round takes *mixed-length*
+    prompts from every queue head: prompts are right-padded to the round
+    maximum and the fused bulk prefill selects each row's logits at its
+    own last real token (``plens``), so heterogeneous requests admit in
+    a single fused call instead of one round per length.
+  * **Per-token EOS stopping** (``eos_id``) — a slot emitting EOS retires
+    mid-stream (its pages return to the pool immediately); stats count
+    ``completed_eos`` and ``completed_budget`` separately.
   * **Per-class request queues + admission router** — requests are routed
     to a class queue at submit time (largest-remainder over calibrated
     throughput shares, so the split tracks the chunk table), and admitted
@@ -23,29 +40,31 @@ state.  This engine amortizes all of it:
     a request never moves: steady-state decode performs **zero host
     relayout** (no ``pad_requests``, no chunk-table re-derivation in the
     loop — asserted by tests).
-  * **Donated decode state** — the slot state is threaded through the
-    jitted step with ``donate_argnums``, so the KV caches update in place
-    instead of being copied every token (the copy is the dominant
-    per-token cost of the one-shot loop at real cache sizes).
-  * **Fused bulk prefill** — ``model_zoo.make_prefill_fn(cfg,
-    with_cache=True)`` consumes the whole prompt in one jitted program
-    and bulk-writes the admitted slots' cache lanes, bit-identical to the
-    token-by-token replay (the property that makes a prefilled slot
-    indistinguishable from one that decoded its prompt).
+  * **Donated decode state** — the slot state (dense lanes or page
+    arena) is threaded through the jitted step with ``donate_argnums``,
+    so the caches update in place instead of being copied every token.
+  * **Fused bulk prefill** — one jitted program consumes the whole
+    (padded) prompt batch and writes the admitted slots' cache lanes,
+    bit-identical to the token-by-token replay.  The paged engine
+    prefills *in place* through the same page tables it decodes through
+    (donated arena; busy slots' rows are pointed at phantom pages so
+    their live pages cannot be touched).
   * **Rebalance hysteresis** — per-pod step timings feed
-    ``DynamicScheduler.observe``; slot-region budgets are re-derived
-    *only* when the calibrated ratio drifts past the scheduler's
-    threshold, and only between steps (admission time), never mid-step.
+    ``DynamicScheduler.observe``; slot-region budgets re-derive *only*
+    past the scheduler's drift threshold, and only between steps.
 
-Per-slot positions (a ``(B,)`` position vector through the decode step —
-see ``layers.decode_attention``) are what make the slot table persistent:
-slots age independently, so a freed slot can be re-admitted while its
-neighbours keep decoding.  Retired slots keep stepping as phantom rows
-(row-local math, discarded tokens), which keeps the engine's program
-identical to the one-shot padded batch — the engine's tokens are
-bit-identical to the one-shot mixed ``class_sharded`` path for the same
-prompts (tested, including through MoE capacity routing, which couples
-batch rows and therefore requires the phantom rows to match too).
+Exactness contract (tested in tests/test_paged_serving.py): the paged
+engine's tokens are **bit-identical** to the dense slot-table engine's
+for the same requests.  Free-but-refreshed lanes decode the same pad
+streams as the dense engine's phantom rows through *phantom pages* — one
+shared lane per pod for row-local archs (all pad writers are identical),
+one private lane per slot for MoE archs (capacity routing can
+differentially drop identical pad rows, so they must own their content
+exactly as dense lanes do).  Retired-but-not-refreshed lanes are marked
+dead via the ``live`` mask in *both* engines (their attention output is
+zeroed, making their rows cache-independent), which is what lets the
+paged engine free a retired slot's pages immediately without its dead
+lane diverging from the dense engine's.
 """
 
 from __future__ import annotations
@@ -65,8 +84,10 @@ from repro.configs import ArchConfig
 from repro.core.asymmetric import AsymmetricMesh
 from repro.distributed import sharding as SH
 from repro.models import model_zoo as Z
+from repro.models import transformer as TX
 from repro.observability import metrics as MET
 from repro.observability import trace as T
+from repro.runtime.paging import PagePool, PageSpec, SENTINEL, divisor_page_size
 
 _M = None
 
@@ -95,6 +116,16 @@ def _metrics():
             "rebalances": MET.counter(
                 "engine_rebalances_total",
                 "Slot-budget re-derivations past the drift hysteresis"),
+            "kv_pages_free": MET.gauge(
+                "engine_kv_pool_pages_free",
+                "Unallocated pages in the KV page pool"),
+            "kv_pages_live": MET.gauge(
+                "engine_kv_pool_pages_live",
+                "Allocated pages in the KV page pool"),
+            "page_allocs": MET.counter(
+                "engine_page_allocs_total",
+                "KV pages allocated at admission",
+                labels=("device_class",)),
         }
     return _M
 
@@ -116,6 +147,16 @@ def _hook_takes_units(hook) -> bool:
     return n >= 2
 
 
+def _paged_supported(cfg: ArchConfig) -> tuple[bool, str]:
+    """Can this arch's decode state page?  (pure KV-cache families only)"""
+
+    if TX.block_kind(cfg) == "mamba":
+        return False, "recurrent (Mamba2) state has no KV pages to allocate"
+    if cfg.shared_attn_every:
+        return False, "the hybrid shared-attention cache is not paged"
+    return True, ""
+
+
 @dataclasses.dataclass(frozen=True)
 class Request:
     """One queued generation request."""
@@ -135,6 +176,7 @@ class Completion:
     slot: int                 # global slot id (pod-major)
     pod: int
     device_class: str
+    stop: str = "budget"      # "budget" | "eos"
 
 
 @dataclasses.dataclass
@@ -148,7 +190,10 @@ class EngineStats:
     tokens: int = 0               # tokens generated in steady-state steps
     admitted: int = 0
     completed: int = 0
+    completed_eos: int = 0        # retired by emitting eos_id
+    completed_budget: int = 0     # retired by exhausting max_new_tokens
     admission_rounds: int = 0
+    admission_deferrals: int = 0  # admissions deferred by page-pool exhaustion
     # Host relayouts performed by the decode loop.  Structurally zero: the
     # engine has no relayout site after admission (requests keep their
     # slot), which tests/test_serving.py enforces by *poisoning*
@@ -187,6 +232,19 @@ class ServingEngine:
     class_sharded : "auto" | "on" | "off" — as in launch/serve.py.
     donate : donate the decode state through the jitted step (in-place
         cache updates).  Off only for the A/B test of the donation path.
+    paged : "off" (default) | "auto" | "on" — replace the dense per-slot
+        KV lanes with the paged pool.  "auto" pages every pure KV-cache
+        family and silently stays dense where paging is unsupported
+        (Mamba2 / hybrid shared-attention state); "on" raises there.
+    page_size : tokens per page.  Default: the min tuned ``block.bm``
+        across the mesh's classes, rounded down to a divisor of the
+        logical cache length (the table width must satisfy
+        ``W · page_size == s_cache`` exactly — the bit-identity contract).
+    pool_pages : physical pages per pod partition.  Default: enough for
+        every slot's full lane plus the phantom lanes (never defers);
+        size it below that to trade admission deferrals for memory.
+    eos_id : token id that stops a request mid-stream (its slot retires
+        and — paged — its pages free immediately).  None disables.
     pod_time_hook : feeds the scheduler's straggler calibration.  The
         default ``"auto"`` installs a
         :class:`~repro.observability.probe.StepTimeProbe` that measures
@@ -209,12 +267,20 @@ class ServingEngine:
         mesh=None,
         class_sharded: str = "auto",
         donate: bool = True,
+        paged: Union[str, bool] = "off",
+        page_size: Optional[int] = None,
+        pool_pages: Optional[int] = None,
+        eos_id: Optional[int] = None,
         pod_time_hook: Union[str, None, Callable[..., Optional[Sequence[float]]]] = "auto",
     ):
         if cfg.embed_inputs or cfg.family == "encdec":
             raise ValueError(f"{cfg.name}: the serving engine targets token-in archs")
         if class_sharded not in ("auto", "on", "off"):
             raise ValueError(f"class_sharded={class_sharded!r}")
+        if isinstance(paged, bool):
+            paged = "on" if paged else "off"
+        if paged not in ("auto", "on", "off"):
+            raise ValueError(f"paged={paged!r}")
         self.cfg = cfg
         self.params = params
         self.asym = asym
@@ -223,6 +289,7 @@ class ServingEngine:
         self.n_pods = asym.n_pods
         self.n_slots = self.n_pods * self.c_max
         self.donate = bool(donate)
+        self.eos_id = None if eos_id is None else int(eos_id)
         if pod_time_hook == "auto":
             from repro.observability.probe import StepTimeProbe
 
@@ -268,9 +335,50 @@ class ServingEngine:
         self.completions: list[Completion] = []
         self.stats = EngineStats()
         self._rebalances0 = asym.scheduler.rebalances
+        # Lane liveness: True for busy slots and for free lanes refreshed
+        # as pad streams at the last admission; False for retired-but-not-
+        # refreshed lanes, whose attention output both engines zero.
+        self._live = np.zeros(self.n_slots, bool)
+        self._pod_of_row = np.arange(self.n_slots) // self.c_max
+
+        # -- KV storage: dense per-slot lanes or the paged pool ------------
+        supported, why = _paged_supported(cfg)
+        if paged == "on" and not supported:
+            raise ValueError(f"paged='on': {cfg.name}: {why}")
+        self.paged = paged == "on" or (paged == "auto" and supported)
+        self.s_cache = TX.cache_len(cfg, self.seq_cap) if supported else self.seq_cap
+        if self.paged:
+            if page_size is None:
+                try:
+                    page_size = min(
+                        t.block.bm for t in asym.control_trees().values()
+                    )
+                except Exception:
+                    page_size = 16
+            ps = divisor_page_size(self.s_cache, page_size)
+            w = self.s_cache // ps
+            # MoE capacity routing couples batch rows: pad lanes must own
+            # their phantom content like dense lanes do (see paging.py).
+            per_slot_phantom = TX.block_kind(cfg) == "attn_moe"
+            phantom_per_pod = self.c_max if per_slot_phantom else 1
+            if pool_pages is None:
+                pool_pages = (self.c_max + phantom_per_pod) * w
+            spec = PageSpec(
+                page_size=ps, pages_per_slot=w,
+                pages_per_pod=int(pool_pages), n_pods=self.n_pods,
+            )
+            self.pool: Optional[PagePool] = PagePool(spec, self.c_max)
+            self.phantom = self.pool.alloc_phantom(per_slot=per_slot_phantom)
+            self._phantom_rows_idx = (
+                np.arange(self.n_slots) if per_slot_phantom else self._pod_of_row
+            )
+            self.state = Z.init_decode_state_paged(cfg, spec.n_pages, ps)
+        else:
+            self.pool = None
+            self.phantom = None
+            self.state = Z.init_decode_state(cfg, self.n_slots, self.seq_cap)
 
         # -- device state: allocated once, donated every step --------------
-        self.state = Z.init_decode_state(cfg, self.n_slots, self.seq_cap)
         self.tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
         self._pos = np.zeros(self.n_slots, np.int64)  # device copy passed per step
         self._step_calls = 0
@@ -282,10 +390,20 @@ class ServingEngine:
     def _build(self):
         cfg, asym = self.cfg, self.asym
         decode = Z.make_decode_fn(cfg)
-        state_spec = Z.decode_state_spec(cfg, self.n_slots, self.seq_cap)
+        if self.paged:
+            spec = self.pool.spec
+            state_spec = jax.eval_shape(
+                lambda: Z.init_decode_state_paged(cfg, spec.n_pages, spec.page_size)
+            )
+            batch_keys = ("tokens", "page_table", "live")
+        else:
+            state_spec = Z.decode_state_spec(cfg, self.n_slots, self.seq_cap)
+            batch_keys = ("tokens", "live")
 
         if self.mixed:
-            in_specs, out_specs = SH.pod_decode_specs(state_spec)
+            in_specs, out_specs = SH.pod_decode_specs(
+                state_spec, batch_keys=batch_keys
+            )
             core = asym.class_sharded(
                 decode,
                 mesh=self.mesh,
@@ -303,8 +421,8 @@ class ServingEngine:
             self.provenance = None
         self._core = core
 
-        def step_fn(params, tokens, state, pos):
-            logits, state = core(params, {"tokens": tokens}, state, pos)
+        def step_fn(params, batch, state, pos):
+            logits, state = core(params, batch, state, pos)
             nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
             return nxt, state
 
@@ -313,16 +431,29 @@ class ServingEngine:
 
         bulk = Z.bulk_prefill_from_decode(core)
 
-        def prefill_fn(params, prompts):
-            # Fresh zero state traced inside the program: the fused prefill
-            # writes every admitted lane from scratch in one shot.
-            fresh = Z.init_decode_state(cfg, self.n_slots, self.seq_cap)
-            pos0 = jnp.zeros((self.n_slots,), jnp.int32)
-            logits, state = bulk(params, {"tokens": prompts}, fresh, pos0)
-            nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-            return nxt, state
+        if self.paged:
+            def prefill_fn(params, batch, state, plens):
+                # In-place prefill through the page tables: the arena is
+                # donated; busy slots' table rows point at phantom pages,
+                # so their live pages flow through untouched.
+                pos0 = jnp.zeros((self.n_slots,), jnp.int32)
+                logits, state = bulk(params, batch, state, pos0, plens=plens)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+                return nxt, state
 
-        self._prefill = jax.jit(prefill_fn)
+            self._prefill = jax.jit(prefill_fn, donate_argnums=donate)
+        else:
+            def prefill_fn(params, batch, plens):
+                # Fresh zero state traced inside the program: the fused
+                # prefill writes every admitted lane from scratch in one
+                # shot; the merge below keeps busy lanes.
+                fresh = Z.init_decode_state(cfg, self.n_slots, self.seq_cap)
+                pos0 = jnp.zeros((self.n_slots,), jnp.int32)
+                logits, state = bulk(params, batch, fresh, pos0, plens=plens)
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+                return nxt, state
+
+            self._prefill = jax.jit(prefill_fn)
 
         def merge_fn(old_state, new_state, old_tokens, new_tokens, take_new):
             # Lanes in ``take_new`` — the admitted slots plus every free
@@ -343,6 +474,24 @@ class ServingEngine:
             return state, tokens
 
         self._merge = jax.jit(merge_fn, donate_argnums=(0,) if self.donate else ())
+
+    # -- page-table assembly (paged mode only; host-side, O(B·W)) -----------
+
+    def _localize(self, table: np.ndarray) -> np.ndarray:
+        if not self.mixed:
+            return table
+        return self.pool.localize(table, self._pod_of_row)
+
+    def _step_table(self) -> np.ndarray:
+        """The decode step's (B, W) page table: busy slots read their own
+        pages, live pad lanes their phantom row, dead lanes SENTINEL
+        (writes dropped, reads masked by the zeroed ``live`` output)."""
+
+        busy = self.slot_rid >= 0
+        table = self.phantom[self._phantom_rows_idx].copy()
+        table[busy] = self.pool.table[busy]
+        table[~busy & ~self._live] = SENTINEL
+        return self._localize(table)
 
     # -- admission router ----------------------------------------------------
 
@@ -430,28 +579,27 @@ class ServingEngine:
     def admit(self) -> int:
         """Admit queued requests into free budgeted slots; returns count.
 
-        One admission round prefills one prompt length (the head of each
-        queue gates what joins the round — mixed lengths admit over
-        successive rounds).  The fused prefill runs over the full slot
-        table (free lanes see zero prompts — the same phantom rows the
-        one-shot padded batch carries) and the merge writes only the
-        admitted lanes, donated, so running slots are untouched in place.
+        Continuous batching: one round takes *mixed-length* prompts from
+        every queue head — right-padded to the round maximum, each row's
+        first generated token selected at its own last real prompt token
+        (``plens``).  The fused prefill runs over the full slot table
+        (free lanes see zero prompts — the same phantom rows the one-shot
+        padded batch carries).  In paged mode every page a request can
+        ever touch is reserved all-or-nothing first; a pod partition that
+        cannot cover the head request defers it (FIFO) untouched.
         """
 
         self._refresh_budgets()
         busy_before = self.slot_rid >= 0
-        plen = None
-        for q in self.queues:
-            if q:
-                plen = len(q[0].prompt) if plen is None else min(plen, len(q[0].prompt))
-        if plen is None:
+        if not any(self.queues):
             return 0
 
         def take(budgeted: bool) -> list[tuple[int, "Request"]]:
             out = []
             for ci, q in enumerate(self.queues):
                 pods = [p for p, c in enumerate(self._pod_class) if c == ci]
-                while q and len(q[0].prompt) == plen:
+                while q:
+                    req = q[0]
                     slot = None
                     for pod in pods:
                         slot = (
@@ -463,7 +611,18 @@ class ServingEngine:
                             break
                     if slot is None:
                         break
-                    req = q.popleft()
+                    if self.pool is not None:
+                        need = min(
+                            len(req.prompt) + req.max_new_tokens, self.s_cache
+                        )
+                        if not self.pool.alloc(slot, need):
+                            # Pod partition exhausted: defer the head (it
+                            # keeps its FIFO turn; the pool and every live
+                            # slot are untouched — all-or-nothing alloc).
+                            self.stats.admission_deferrals += 1
+                            break
+                        self._note_page_alloc(slot, need)
+                    q.popleft()
                     out.append((slot, req))
                     self.slot_rid[slot] = req.rid  # reserve before next _free_slot
             return out
@@ -477,42 +636,68 @@ class ServingEngine:
         if not batch:
             return 0
 
-        prompts = np.zeros((self.n_slots, plen), np.int32)
+        rp = max(len(req.prompt) for _, req in batch)
+        prompts = np.zeros((self.n_slots, rp), np.int32)
+        plens = np.full(self.n_slots, rp, np.int32)
         for slot, req in batch:
-            prompts[slot] = req.prompt
+            prompts[slot, : len(req.prompt)] = req.prompt
+            plens[slot] = len(req.prompt)
         # Admitted slots plus every phantom (free) lane take the fresh
         # prefill — see merge_fn.
         take_new = ~busy_before
 
         t0 = time.perf_counter()
-        nxt, fresh_state = self._prefill(self.params, jnp.asarray(prompts))
-        self.state, self.tokens = self._merge(
-            self.state, fresh_state, self.tokens, nxt, jnp.asarray(take_new)
-        )
+        live_all = jnp.ones((self.n_slots,), bool)
+        if self.pool is not None:
+            table = self.phantom[self._phantom_rows_idx].copy()
+            for slot, _ in batch:
+                table[slot] = self.pool.table[slot]
+            pbatch = {
+                "tokens": jnp.asarray(prompts),
+                "page_table": jnp.asarray(self._localize(table)),
+                "live": live_all,
+            }
+            nxt, self.state = self._prefill(
+                self.params, pbatch, self.state, jnp.asarray(plens)
+            )
+            self.tokens = jnp.where(
+                jnp.asarray(take_new)[:, None], nxt, self.tokens
+            )
+        else:
+            pbatch = {"tokens": jnp.asarray(prompts), "live": live_all}
+            nxt, fresh_state = self._prefill(
+                self.params, pbatch, jnp.asarray(plens)
+            )
+            self.state, self.tokens = self._merge(
+                self.state, fresh_state, self.tokens, nxt, jnp.asarray(take_new)
+            )
         first = np.asarray(nxt)  # blocks; first generated token per lane
         dt = time.perf_counter() - t0
-        compiling = plen not in self._prefill_compiled
+        compiling = rp not in self._prefill_compiled
         if compiling:
-            self._prefill_compiled.add(plen)
+            self._prefill_compiled.add(rp)
             self.stats.compile_s += dt
         else:
             self.stats.prefill_s += dt
         if T.enabled():
-            self._record_admit_telemetry(t0, dt, plen, batch, compiling)
+            self._record_admit_telemetry(t0, dt, rp, batch, compiling)
 
+        self._live[take_new] = True
+        self._pos[take_new] = plens[take_new]
         for slot, req in batch:
-            self.slot_pos[slot] = plen
+            self.slot_pos[slot] = len(req.prompt)
             self._slot_req[slot] = req
             self._slot_toks[slot] = [int(first[slot, 0])]
             self.slot_remaining[slot] = req.max_new_tokens - 1
             self.stats.admitted += 1
-            if self.slot_remaining[slot] == 0:
-                self._retire(slot)
-        self._pos[take_new] = plen
+            if self.eos_id is not None and int(first[slot, 0]) == self.eos_id:
+                self._retire(slot, stop="eos")
+            elif self.slot_remaining[slot] == 0:
+                self._retire(slot, stop="budget")
         self.stats.admission_rounds += 1
         return len(batch)
 
-    def _retire(self, slot: int):
+    def _retire(self, slot: int, stop: str = "budget"):
         req = self._slot_req.pop(slot)
         pod = slot // self.c_max
         self.completions.append(
@@ -525,11 +710,42 @@ class ServingEngine:
                 slot=slot,
                 pod=pod,
                 device_class=self.asym.class_of_pod(pod).name,
+                stop=stop,
             )
         )
         self.slot_rid[slot] = -1
         self.slot_remaining[slot] = 0
+        self._live[slot] = False
         self.stats.completed += 1
+        if stop == "eos":
+            self.stats.completed_eos += 1
+        else:
+            self.stats.completed_budget += 1
+        if self.pool is not None:
+            freed = self.pool.free_slot(slot)
+            if T.enabled() and freed:
+                m = _metrics()
+                m["kv_pages_free"].set(self.pool.pages_free)
+                m["kv_pages_live"].set(self.pool.pages_live)
+                T.instant(
+                    "engine.page_free", cat="engine", slot=slot, pages=freed,
+                    stop=stop, pages_live=self.pool.pages_live,
+                    pages_free=self.pool.pages_free,
+                )
+
+    def _note_page_alloc(self, slot: int, n_tokens: int):
+        if not T.enabled():
+            return
+        m = _metrics()
+        pages = self.pool.spec.pages_for(n_tokens)
+        name = self.asym.class_of_pod(slot // self.c_max).name
+        m["page_allocs"].labels(device_class=name).inc(pages)
+        m["kv_pages_free"].set(self.pool.pages_free)
+        m["kv_pages_live"].set(self.pool.pages_live)
+        T.instant(
+            "engine.page_alloc", cat="engine", slot=slot, pages=pages,
+            pages_live=self.pool.pages_live, pages_free=self.pool.pages_free,
+        )
 
     # -- steady-state decode ---------------------------------------------------
 
@@ -537,8 +753,9 @@ class ServingEngine:
         """One decode step over the whole slot table; returns active count.
 
         No host relayout: the step consumes the resident token/position
-        vectors and the donated slot state.  Every slot advances (freed
-        slots as phantom rows), matching the one-shot padded batch
+        vectors, the lane-liveness mask, (paged) the page table assembled
+        from pool state, and the donated slot state.  Every slot advances
+        (freed slots as phantom rows), matching the one-shot padded batch
         program exactly.
         """
 
@@ -547,8 +764,11 @@ class ServingEngine:
         if n_active == 0:
             return 0
         t0 = time.perf_counter()
+        batch = {"tokens": self.tokens, "live": jnp.asarray(self._live)}
+        if self.pool is not None:
+            batch["page_table"] = jnp.asarray(self._step_table())
         nxt, self.state = self._step(
-            self.params, self.tokens, self.state, jnp.asarray(self._pos, jnp.int32)
+            self.params, batch, self.state, jnp.asarray(self._pos, jnp.int32)
         )
         self.tokens = nxt
         toks = np.asarray(nxt)  # blocks: the step's wall time is real
@@ -563,10 +783,14 @@ class ServingEngine:
         self._pos += 1  # every slot ages (phantom rows match one-shot padding)
 
         for slot in np.nonzero(active)[0]:
-            self._slot_toks[int(slot)].append(int(toks[slot, 0]))
+            slot = int(slot)
+            tok = int(toks[slot, 0])
+            self._slot_toks[slot].append(tok)
             self.slot_remaining[slot] -= 1
-            if self.slot_remaining[slot] == 0:
-                self._retire(int(slot))
+            if self.eos_id is not None and tok == self.eos_id:
+                self._retire(slot, stop="eos")
+            elif self.slot_remaining[slot] == 0:
+                self._retire(slot, stop="budget")
 
         if T.enabled():
             self._record_step_telemetry(t0, dt, n_active, active,
@@ -595,6 +819,40 @@ class ServingEngine:
     def _pod_active_before(self, active_mask: np.ndarray) -> list[int]:
         act = active_mask.reshape(self.n_pods, self.c_max)
         return [int(a.sum()) for a in act]
+
+    # -- KV memory accounting ---------------------------------------------------
+
+    def kv_stats(self) -> dict:
+        """KV memory accounting for reporting (serve.py / bench_serving).
+
+        Dense mode reports the lanes' actual byte size.  Paged mode adds
+        the pool occupancy counters and the headline comparison:
+        ``peak_kv_bytes`` (peak live pages × bytes per page — the arena an
+        operator could have provisioned) vs ``dense_kv_bytes`` (what the
+        dense engine allocates for the same slot table).
+        """
+
+        arena = int(sum(x.nbytes for x in jax.tree.leaves(self.state)))
+        if self.pool is None:
+            return {"paged": False, "kv_bytes": arena}
+        spec = self.pool.spec
+        itemsize = self.state["pages_k"].dtype.itemsize
+        per_tok = 2 * self.cfg.n_layers * self.cfg.n_kv_heads * self.cfg.head_dim
+        page_bytes = per_tok * spec.page_size * itemsize
+        return {
+            "paged": True,
+            "page_size": spec.page_size,
+            "pages_per_slot": spec.pages_per_slot,
+            "n_pages": spec.n_pages,
+            "pages_live": self.pool.pages_live,
+            "pages_free": self.pool.pages_free,
+            "peak_live_pages": self.pool.peak_live,
+            "phantom_pages": int(self.phantom.size),
+            "page_bytes": page_bytes,
+            "peak_kv_bytes": self.pool.peak_live * page_bytes,
+            "arena_kv_bytes": arena,
+            "dense_kv_bytes": per_tok * self.n_slots * self.s_cache * itemsize,
+        }
 
     # -- telemetry (every method below only runs while tracing is enabled) ----
 
@@ -678,8 +936,10 @@ class ServingEngine:
                 admitted = self.admit()
                 if admitted == 0 and not (self.slot_rid >= 0).any():
                     raise RuntimeError(
-                        "admission made no progress with an empty slot table"
-                    )  # unreachable: the starvation guard admits something
+                        "admission made no progress with an empty slot table "
+                        "(a queued request's page reservation exceeds its pod's "
+                        "pool partition?)"
+                    )
             if not (self.slot_rid >= 0).any():
                 break
             self.step()
@@ -695,7 +955,9 @@ class ServingEngine:
         reproducing exactly the ``pad_requests`` pod-major placement of
         the one-shot path, which is what makes the outputs bit-identical
         to it (same slot layout, same phantom rows).  Returns
-        ``(B, P + gen_len)`` tokens in submission order.
+        ``(B, P + gen_len)`` tokens in submission order (rows of requests
+        stopped early by ``eos_id`` are zero-padded past their last
+        token).
         """
 
         prompts = np.asarray(prompts, np.int32)

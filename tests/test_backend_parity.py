@@ -1,13 +1,18 @@
 """Cross-backend kernel parity harness.
 
 Every entry of ``execution.BACKENDS`` — present and future — is run
-against the pure-jnp oracle (``kernels/ref.gemm_ref``) over a grid of
-shapes (ragged, non-multiple-of-block, 1-row/1-col edges) and dtypes
-(f32, bf16), with per-dtype tolerances.  The parametrization iterates the
-dispatch table itself, so **adding a backend automatically adds its
-parity coverage**: a new entry that lacks an interpret twin (the CPU
-route, ``execution.INTERPRET_TWIN``) fails ``test_every_backend_has_a_
-cpu_route`` before it can ship untested.
+against a pure-jnp oracle over a grid of shapes and dtypes (f32, bf16)
+with per-dtype tolerances; the grid is chosen per *op family*
+(``execution.BACKEND_OPS``): GEMM backends against ``kernels/ref.gemm_
+ref`` over ragged/non-multiple-of-block/1-row/1-col edges, paged-
+attention backends against ``kernels/ref.paged_attention_ref`` over
+GQA/MHA head layouts, page sizes, sentinel-holding tables, and ring-
+wrapped positions.  The parametrizations iterate the dispatch table
+itself, so **adding a backend automatically adds its parity coverage**:
+a new entry that lacks an interpret twin (the CPU route,
+``execution.INTERPRET_TWIN``) fails ``test_every_backend_has_a_
+cpu_route`` before it can ship untested, and an entry missing from
+``BACKEND_OPS`` fails the vocabulary test in tests/test_execution.py.
 
 Pallas variants execute through their interpret twins (the kernel *body*
 is identical; Mosaic compilation is the only thing interpret mode skips),
@@ -72,7 +77,7 @@ def test_every_backend_has_a_cpu_route():
 
 @pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
 @pytest.mark.parametrize("shape", SHAPES, ids=lambda s: "x".join(map(str, s)))
-@pytest.mark.parametrize("backend", sorted(X.BACKENDS))
+@pytest.mark.parametrize("backend", sorted(X.GEMM_BACKEND_NAMES))
 def test_backend_matches_oracle(backend, shape, dtype):
     m, k, n = shape
     a, b = _rand((m, k), dtype), _rand((k, n), dtype)
@@ -87,7 +92,7 @@ def test_backend_matches_oracle(backend, shape, dtype):
     )
 
 
-@pytest.mark.parametrize("backend", sorted(X.BACKENDS))
+@pytest.mark.parametrize("backend", sorted(X.GEMM_BACKEND_NAMES))
 def test_backend_default_config_resolution(backend):
     """cfg=None resolves per backend (lean derives single-buffered) and
     still matches the oracle."""
@@ -96,6 +101,70 @@ def test_backend_default_config_resolution(backend):
     out = X.BACKENDS[X.interpret_twin(backend)](a, b, None, a.dtype)
     np.testing.assert_allclose(
         np.asarray(out), np.asarray(ref.gemm_ref(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention parity (op family "paged_attn")
+# ---------------------------------------------------------------------------
+
+PAGED_BACKENDS = sorted(n for n, op in X.BACKEND_OPS.items() if op == "paged_attn")
+
+# (batch, Hq, Hkv, Dh, page_size, table_width, arena_pages): GQA and MHA
+# head layouts, single- and multi-page lanes, arenas larger than any one
+# row needs (so tables hold genuinely scattered page ids).
+PAGED_CASES = [
+    (3, 4, 2, 16, 8, 4, 16),
+    (5, 8, 8, 32, 16, 2, 12),
+    (2, 4, 1, 8, 4, 8, 40),
+    (4, 2, 2, 64, 32, 1, 6),
+]
+
+
+def _paged_case(b, hq, hkv, dh, ps, w, pages, dtype, seed=0):
+    """Random arena + per-row tables: allocated prefix pages, SENTINEL
+    beyond, positions drawn past ``s_cache`` too (the ring-wrapped row
+    attends its whole logical cache)."""
+
+    from repro.runtime.paging import SENTINEL
+
+    rng = np.random.default_rng(seed + b * 131 + hq * 17 + ps)
+    q = jnp.asarray(rng.normal(size=(b, hq, dh)), dtype)
+    pk = jnp.asarray(rng.normal(size=(pages, ps, hkv, dh)), dtype)
+    pv = jnp.asarray(rng.normal(size=(pages, ps, hkv, dh)), dtype)
+    pos = rng.integers(0, w * ps + ps, size=(b,))
+    table = np.full((b, w), SENTINEL, np.int32)
+    for r in range(b):
+        need = min(int(pos[r]) // ps + 1, w)
+        table[r, :need] = rng.choice(pages, size=need, replace=False)
+    return q, pk, pv, jnp.asarray(table), jnp.asarray(pos, jnp.int32)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+@pytest.mark.parametrize(
+    "case", PAGED_CASES, ids=lambda c: "b{}h{}kv{}d{}ps{}w{}p{}".format(*c)
+)
+@pytest.mark.parametrize("backend", PAGED_BACKENDS)
+def test_paged_attention_matches_oracle(backend, case, dtype):
+    q, pk, pv, table, pos = _paged_case(*case, dtype)
+    out = X.BACKENDS[X.interpret_twin(backend)](q, pk, pv, table, pos)
+    expect = ref.paged_attention_ref(q, pk, pv, table, pos)
+    assert out.shape == expect.shape and out.dtype == expect.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **TOLS[dtype]
+    )
+
+
+def test_paged_dispatch_routes_by_op_family():
+    """The funnel: auto resolves inside the paged_attn family, and the
+    result matches the oracle (tolerance — auto may pick either route)."""
+
+    q, pk, pv, table, pos = _paged_case(*PAGED_CASES[0], jnp.float32)
+    out = X.dispatch_paged_attention(q, pk, pv, table, pos, backend="auto")
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.paged_attention_ref(q, pk, pv, table, pos), np.float32),
+        rtol=1e-4, atol=1e-4,
     )
 
 
@@ -130,7 +199,9 @@ if HAVE_HYPOTHESIS:
         """Random (shape, block, backend, dtype): every backend agrees
         with the oracle whenever the config passes shape validation."""
 
-        backend = data.draw(st.sampled_from(sorted(X.BACKENDS)), label="backend")
+        backend = data.draw(
+            st.sampled_from(sorted(X.GEMM_BACKEND_NAMES)), label="backend"
+        )
         dtype = data.draw(st.sampled_from(DTYPES), label="dtype")
         # Deterministic data per drawn example (hypothesis replays shrink
         # candidates; a shared advancing RNG would make failures flaky).

@@ -121,9 +121,29 @@ class TestContextScoping:
             "pallas_interpret",
             "pallas_lean",
             "pallas_lean_interpret",
+            "paged_attn_xla",
+            "paged_attn_pallas",
+            "paged_attn_pallas_interpret",
         }
+        # The table spans two op families; the GEMM view is the old set.
+        assert set(X.GEMM_BACKEND_NAMES) == {
+            "xla",
+            "pallas",
+            "pallas_interpret",
+            "pallas_lean",
+            "pallas_lean_interpret",
+        }
+        assert set(X.BACKEND_OPS) == set(X.BACKENDS)
         with pytest.raises(ValueError, match="unknown backend"):
             X.resolve_backend("mosaic")
+        # Op-family guards: a GEMM resolver must reject an attention
+        # kernel and vice versa — a tree or CLI flag can never route a
+        # GEMM into a paged-attention kernel.
+        with pytest.raises(ValueError, match="not a GEMM"):
+            X.resolve_backend("paged_attn_xla")
+        with pytest.raises(ValueError, match="not a paged-attention"):
+            X.resolve_paged_attn_backend("pallas")
+        assert X.resolve_paged_attn_backend("auto") in X.BACKENDS
         # auto resolves to a concrete table entry (xla on this CPU host).
         assert X.resolve_backend("auto") in X.BACKENDS
         # Every table entry has a CPU-runnable interpret twin and a

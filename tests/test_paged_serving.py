@@ -1,0 +1,416 @@
+"""Paged KV pool + continuous batching: the exactness and memory contract.
+
+The ISSUE-7 acceptance criteria, as tests:
+
+  * the paged engine's tokens are **bit-identical** to the dense
+    slot-table engine's for the same requests — mixed-length prompts
+    admitted in a single continuous-batching round, dense and MoE archs,
+    single-class and class-sharded mixed (8 forced host devices), with
+    ``ShardProvenance`` still proving the per-class programs;
+  * EOS stopping retires a slot mid-stream, frees its pages immediately,
+    and the streams of every other request are unperturbed; freed pages
+    are reused by later admissions with tokens identical to a fresh
+    engine's;
+  * pool exhaustion *defers* admission (FIFO, counted) without
+    corrupting live slots — every request still completes, bit-identical
+    to the dense engine;
+  * a retired (dead) lane is inert: its attention output is exactly
+    zero and its (stale cache, runaway position) can never change live
+    rows — linear and ring/sliding-window masks both (the phantom-lane
+    masking clamp regression);
+  * the paged allocator itself: all-or-nothing reservation, LIFO reuse,
+    pod partitioning, sentinel/localize arithmetic.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.asymmetric import AsymmetricMesh, DeviceClass, biglittle_classes
+from repro.models import layers as L
+from repro.models import model_zoo as Z
+from repro.models import transformer as TX
+from repro.runtime.paging import PagePool, PageSpec, SENTINEL, divisor_page_size
+from repro.runtime.serving import ServingEngine
+
+RNG = np.random.default_rng(23)
+
+# One row-local dense arch and one MoE arch (capacity routing couples
+# batch rows — the hard case for phantom-lane exactness).
+ARCHS = ["internlm2-1.8b", "mixtral-8x7b"]
+
+
+@pytest.fixture(scope="module")
+def zoo():
+    out = {}
+    for name in ARCHS:
+        cfg = get_config(name).reduced()
+        out[name] = (cfg, Z.init_params(jax.random.PRNGKey(0), cfg))
+    return out
+
+
+def _single(**kw):
+    kw.setdefault("strategy", "ca-das")
+    kw.setdefault("batch_tile", 1)
+    return AsymmetricMesh(
+        [DeviceClass(name="big", n_pods=1, chips_per_pod=1, rel_throughput=1.0)],
+        **kw,
+    )
+
+
+def _biglittle(**kw):
+    kw.setdefault("strategy", "ca-das")
+    kw.setdefault("batch_tile", 1)
+    return AsymmetricMesh(biglittle_classes(chips_per_pod=1), **kw)
+
+
+def _run_engine(cfg, params, asym, requests, *, paged, seq_cap=32,
+                slots_per_pod=4, class_sharded="off", **kw):
+    eng = ServingEngine(
+        cfg, params, asym, seq_cap=seq_cap, slots_per_pod=slots_per_pod,
+        class_sharded=class_sharded, paged=paged, **kw,
+    )
+    rids = [eng.submit(p, g) for p, g in requests]
+    done = {c.rid: c for c in eng.run()}
+    assert set(done) == set(rids)
+    return eng, done
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: paged vs dense, mixed lengths, one admission round
+# ---------------------------------------------------------------------------
+
+
+class TestPagedBitIdentity:
+    @pytest.mark.parametrize("arch", ARCHS)
+    def test_mixed_length_single_round(self, zoo, arch):
+        """Mixed-length prompts admit in ONE round and the paged engine's
+        tokens equal the dense engine's bit-for-bit (free lanes decode as
+        phantom pad rows in both; mid-stream retirements leave dead lanes
+        in both)."""
+
+        cfg, params = zoo[arch]
+        prompts = RNG.integers(0, cfg.vocab, (3, 9), dtype=np.int32)
+        reqs = [(prompts[0][:4], 5), (prompts[1][:9], 7), (prompts[2][:6], 3)]
+        ed, dd = _run_engine(cfg, params, _single(), reqs, paged="off")
+        ep, dp = _run_engine(cfg, params, _single(), reqs, paged="on",
+                             page_size=8)
+        assert ed.stats.admission_rounds == 1 == ep.stats.admission_rounds
+        for rid in dd:
+            assert np.array_equal(dd[rid].tokens, dp[rid].tokens), (arch, rid)
+        # All pages returned once every slot retired; the phantom lanes
+        # stay resident by design.
+        assert ep.pool.pages_live == ep.phantom.size
+        ks = ep.kv_stats()
+        assert ks["paged"] and ks["peak_live_pages"] > ks["pages_live"]
+        assert ks["page_bytes"] * ks["n_pages"] == ks["arena_kv_bytes"]
+
+    @pytest.mark.parametrize("arch", ARCHS)
+    @pytest.mark.skipif(jax.device_count() < 2, reason="needs 2 host devices")
+    def test_mixed_class_sharded(self, zoo, arch):
+        """The class-sharded mixed step (pod-partitioned arena, localized
+        page ids) is bit-identical to the dense mixed step, and
+        ShardProvenance still proves one program per class."""
+
+        cfg, params = zoo[arch]
+        prompts = RNG.integers(0, cfg.vocab, (5, 9), dtype=np.int32)
+        plens, gens = [4, 9, 6, 9, 5], [5, 3, 7, 4, 6]
+        reqs = [(prompts[i][:plens[i]], gens[i]) for i in range(5)]
+        ed, dd = _run_engine(cfg, params, _biglittle(), reqs, paged="off",
+                             class_sharded="auto")
+        ep, dp = _run_engine(cfg, params, _biglittle(), reqs, paged="on",
+                             page_size=8, class_sharded="auto")
+        assert ed.mixed and ep.mixed
+        assert [(p.pod, p.device_class) for p in ep.provenance] == [
+            (0, "big"), (1, "little"),
+        ]
+        for rid in dd:
+            assert np.array_equal(dd[rid].tokens, dp[rid].tokens), (arch, rid)
+
+    def test_paged_auto_and_unsupported(self, zoo):
+        """"auto" pages pure KV-cache archs and silently stays dense where
+        state cannot page; "on" raises there."""
+
+        cfg, params = zoo["internlm2-1.8b"]
+        eng = ServingEngine(cfg, params, _single(), seq_cap=16,
+                            class_sharded="off", paged="auto")
+        assert eng.pool is not None
+
+        for unsupported in ("mamba2-1.3b", "zamba2-2.7b"):
+            mcfg = get_config(unsupported).reduced()
+            mparams = Z.init_params(jax.random.PRNGKey(0), mcfg)
+            auto = ServingEngine(mcfg, mparams, _single(), seq_cap=16,
+                                 class_sharded="off", paged="auto")
+            assert auto.pool is None, unsupported
+            with pytest.raises(ValueError, match="paged='on'"):
+                ServingEngine(mcfg, mparams, _single(), seq_cap=16,
+                              class_sharded="off", paged="on")
+
+
+# ---------------------------------------------------------------------------
+# EOS stopping + page reuse
+# ---------------------------------------------------------------------------
+
+
+class TestEosAndReuse:
+    def test_eos_frees_pages_mid_stream_without_perturbing_others(self, zoo):
+        """A request that emits EOS retires mid-stream (pages freed,
+        counted as completed_eos); every other request's stream is
+        bit-identical to the run without EOS."""
+
+        cfg, params = zoo["internlm2-1.8b"]
+        prompts = RNG.integers(0, cfg.vocab, (3, 6), dtype=np.int32)
+        reqs = [(prompts[i], 6) for i in range(3)]
+        _, base = _run_engine(cfg, params, _single(), reqs, paged="on")
+        # Pick the token rid 0 generates mid-stream as the EOS id: the
+        # rerun must stop that request right there.
+        eos = int(base[0].tokens[6 + 2])
+        eng, done = _run_engine(cfg, params, _single(), reqs, paged="on",
+                                eos_id=eos)
+        assert eng.stats.completed_eos >= 1
+        assert eng.stats.completed_eos + eng.stats.completed_budget == 3
+        for rid, comp in done.items():
+            full = base[rid].tokens
+            if comp.stop == "eos":
+                n = len(comp.tokens)
+                assert comp.tokens[-1] == eos
+                assert np.array_equal(comp.tokens, full[:n])
+            else:
+                assert eos not in full[6:]  # budget rows never saw EOS
+                assert np.array_equal(comp.tokens, full)
+        # EOS parity with the dense engine, bit for bit.
+        engd, doned = _run_engine(cfg, params, _single(), reqs, paged="off",
+                                  eos_id=eos)
+        for rid in done:
+            assert np.array_equal(done[rid].tokens, doned[rid].tokens)
+            assert done[rid].stop == doned[rid].stop
+        assert engd.stats.completed_eos == eng.stats.completed_eos
+
+    def test_page_reuse_after_completion_identical_to_fresh(self, zoo):
+        """A second wave reuses the pages the first wave freed (LIFO) and
+        its tokens are bit-identical to a fresh paged engine's."""
+
+        cfg, params = zoo["internlm2-1.8b"]
+        w1 = RNG.integers(0, cfg.vocab, (4, 6), dtype=np.int32)
+        w2 = RNG.integers(0, cfg.vocab, (4, 6), dtype=np.int32)
+        eng = ServingEngine(cfg, params, _single(), seq_cap=32,
+                            slots_per_pod=4, class_sharded="off", paged="on",
+                            page_size=8)
+        eng.generate(w1, 4)
+        live_between = eng.pool.pages_live
+        assert live_between == eng.phantom.size  # wave-1 pages all freed
+        got = eng.generate(w2, 4)
+
+        fresh = ServingEngine(cfg, params, _single(), seq_cap=32,
+                              slots_per_pod=4, class_sharded="off", paged="on",
+                              page_size=8)
+        assert np.array_equal(got, fresh.generate(w2, 4))
+        assert eng.stats.completed == 8
+        # Reuse, not growth: the second wave never allocated beyond the
+        # first wave's high-water mark.
+        assert eng.pool.peak_live == fresh.pool.peak_live
+
+
+# ---------------------------------------------------------------------------
+# Pool exhaustion defers (never corrupts)
+# ---------------------------------------------------------------------------
+
+
+class TestExhaustion:
+    def test_exhaustion_defers_and_completes(self, zoo):
+        """A pool sized for two in-flight requests serves four: admission
+        defers (counted), live slots are untouched, every request
+        completes bit-identical to the dense engine."""
+
+        cfg, params = zoo["internlm2-1.8b"]
+        prompts = RNG.integers(0, cfg.vocab, (4, 8), dtype=np.int32)
+        reqs = [(prompts[i], 8) for i in range(4)]
+        # page_size 8, seq_cap 32 -> W = 4; each request reserves
+        # ceil(16/8) = 2 pages.  pool = 8 pages = phantom lane (4) + two
+        # requests' worth: the 3rd admission must defer until a retire.
+        ep, dp = _run_engine(cfg, params, _single(), reqs, paged="on",
+                             page_size=8, pool_pages=8)
+        assert ep.stats.admission_deferrals >= 1
+        assert ep.stats.admission_rounds >= 2
+        ed, dd = _run_engine(cfg, params, _single(), reqs, paged="off")
+        for rid in dd:
+            assert np.array_equal(dd[rid].tokens, dp[rid].tokens)
+
+    def test_infeasible_request_raises(self, zoo):
+        """A request whose reservation can never fit (even an empty pool)
+        fails loudly instead of spinning."""
+
+        cfg, params = zoo["internlm2-1.8b"]
+        eng = ServingEngine(cfg, params, _single(), seq_cap=32,
+                            slots_per_pod=4, class_sharded="off", paged="on",
+                            page_size=8, pool_pages=5)  # phantom takes 4
+        eng.submit(np.ones(8, np.int32), 8)  # needs 2 pages, 1 free
+        with pytest.raises(RuntimeError, match="no progress"):
+            eng.run()
+
+
+# ---------------------------------------------------------------------------
+# Dead-lane inertness (the phantom-lane masking clamp regression)
+# ---------------------------------------------------------------------------
+
+
+class TestDeadLaneMasking:
+    @pytest.mark.parametrize("window", [None, 8], ids=["linear", "ring"])
+    def test_dead_lane_never_changes_live_rows(self, window):
+        """A retired lane — live=False, position aged arbitrarily far past
+        the cache — contributes exactly zero output, and scrambling its
+        cache/position leaves live rows bit-identical (both mask shapes)."""
+
+        acfg = L.AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, d_head=8,
+                            window=window)
+        p = L.init_attention(jax.random.PRNGKey(1), acfg)
+        b = 3
+        s_cache = window or 16
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(b, 1, 32)), L.COMPUTE_DTYPE)
+        ck = jnp.asarray(rng.normal(size=(b, s_cache, 2, 8)), L.COMPUTE_DTYPE)
+        cv = jnp.asarray(rng.normal(size=(b, s_cache, 2, 8)), L.COMPUTE_DTYPE)
+        pos = jnp.asarray([5, s_cache + 7, 3], jnp.int32)  # lane 1 is dead
+        live = jnp.asarray([True, False, True])
+
+        h1, _ = L.decode_attention(p, x, acfg, ck, cv, pos, live=live)
+        assert np.all(np.isfinite(np.asarray(h1, np.float32)))
+        assert np.all(np.asarray(h1[1], np.float32) == 0.0)
+
+        # Scramble the dead lane: garbage cache, runaway position.
+        ck2 = ck.at[1].set(1e4)
+        cv2 = cv.at[1].set(-1e4)
+        pos2 = pos.at[1].set(3 * s_cache + 1)
+        h2, _ = L.decode_attention(p, x, acfg, ck2, cv2, pos2, live=live)
+        assert np.array_equal(np.asarray(h1[0]), np.asarray(h2[0]))
+        assert np.array_equal(np.asarray(h1[2]), np.asarray(h2[2]))
+
+    def test_live_lane_past_cache_is_finite(self):
+        """The clamp itself: a LIVE linear-mask row whose position reached
+        the cache length attends the full cache (finite softmax) instead
+        of masking every key (NaN) — the bug the clamp fixed."""
+
+        acfg = L.AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, d_head=8)
+        p = L.init_attention(jax.random.PRNGKey(2), acfg)
+        rng = np.random.default_rng(6)
+        s_cache = 8
+        x = jnp.asarray(rng.normal(size=(2, 1, 32)), L.COMPUTE_DTYPE)
+        ck = jnp.asarray(rng.normal(size=(2, s_cache, 2, 8)), L.COMPUTE_DTYPE)
+        cv = jnp.asarray(rng.normal(size=(2, s_cache, 2, 8)), L.COMPUTE_DTYPE)
+        pos = jnp.asarray([s_cache, 2], jnp.int32)
+        h, _ = L.decode_attention(p, x, acfg, ck, cv, pos)
+        assert np.all(np.isfinite(np.asarray(h, np.float32)))
+
+
+# ---------------------------------------------------------------------------
+# The allocator
+# ---------------------------------------------------------------------------
+
+
+class TestPagePool:
+    def test_divisor_page_size(self):
+        assert divisor_page_size(32, 8) == 8
+        assert divisor_page_size(32, 12) == 8   # rounds down to a divisor
+        assert divisor_page_size(32, 100) == 32
+        assert divisor_page_size(7, 4) == 1     # prime cache length
+
+    def test_all_or_nothing_and_lifo_reuse(self):
+        spec = PageSpec(page_size=4, pages_per_slot=4, pages_per_pod=6,
+                        n_pods=1)
+        pool = PagePool(spec, c_max=2)
+        assert pool.alloc(0, 16)          # 4 pages
+        assert not pool.alloc(1, 12)      # needs 3, only 2 left: untouched
+        assert np.all(pool.table[1] == SENTINEL)
+        assert pool.pages_live == 4
+        freed_pages = list(pool.table[0])
+        assert pool.free_slot(0) == 4
+        assert pool.pages_live == 0
+        assert pool.alloc(1, 12)
+        # LIFO: the pages slot 0 just returned come straight back.
+        assert set(pool.table[1][:3]) <= set(freed_pages)
+        # Growing an existing reservation allocates only the missing tail.
+        assert pool.alloc(1, 16)
+        assert pool.pages_live == 4 and pool.peak_live == 4
+
+    def test_pod_partitioning_and_localize(self):
+        spec = PageSpec(page_size=4, pages_per_slot=2, pages_per_pod=3,
+                        n_pods=2)
+        pool = PagePool(spec, c_max=2)
+        assert pool.alloc(0, 8)   # 2 pages from pod 0's partition
+        assert pool.alloc(2, 8)   # 2 pages from pod 1's
+        assert np.all(pool.table[0] < 3)
+        assert np.all((pool.table[2] >= 3) & (pool.table[2] < 6))
+        table = pool.table.copy()
+        local = pool.localize(table, np.asarray([0, 0, 1, 1]))
+        assert np.all(local[2] == pool.table[2] - 3)
+        assert np.all(local[0] == pool.table[0])
+        # SENTINEL entries stay far out of range after localization.
+        assert np.all(local[1] > spec.n_pages)
+        # Pod 0 exhaustion (one page free, two needed) is all-or-nothing
+        # and does not touch pod 1's free list.
+        assert not pool.alloc(1, 8)
+        assert np.all(pool.table[1] == SENTINEL)
+        assert pool.alloc(3, 4)
+
+    def test_phantom_rows(self):
+        spec = PageSpec(page_size=4, pages_per_slot=2, pages_per_pod=8,
+                        n_pods=2)
+        shared = PagePool(spec, c_max=2).alloc_phantom()
+        assert shared.shape == (2, 2)
+        per_slot = PagePool(spec, c_max=2).alloc_phantom(per_slot=True)
+        assert per_slot.shape == (4, 2)
+        # Each phantom row draws from its owner pod's partition.
+        assert np.all(per_slot[:2] < 8) and np.all(per_slot[2:] >= 8)
+        small = PagePool(
+            PageSpec(page_size=4, pages_per_slot=2, pages_per_pod=1,
+                     n_pods=1), c_max=1)
+        with pytest.raises(ValueError, match="pool too small"):
+            small.alloc_phantom()
+
+
+# ---------------------------------------------------------------------------
+# Telemetry + report rollup
+# ---------------------------------------------------------------------------
+
+
+class TestPagedTelemetry:
+    def test_page_instants_metrics_and_rollup(self, zoo, tmp_path):
+        """With observability on, admissions/retirements emit page
+        alloc/free instants and pool gauges; the report CLI's rollup
+        recovers the pool's true high-water mark from the trace."""
+
+        from repro import observability as OBS
+        from repro.observability import report as R
+        from repro.observability import trace as TR
+
+        cfg, params = zoo["internlm2-1.8b"]
+        prompts = RNG.integers(0, cfg.vocab, (3, 6), dtype=np.int32)
+        OBS.enable()
+        try:
+            eng, _ = _run_engine(cfg, params, _single(),
+                                 [(p, 4) for p in prompts], paged="on",
+                                 page_size=8)
+            snap = OBS.REGISTRY.snapshot()
+            buf = TR.get_buffer()
+            events = list(buf.events)
+        finally:
+            OBS.disable()
+        names = {e.name for e in events}
+        assert {"engine.page_alloc", "engine.page_free"} <= names
+        assert "engine_kv_pool_pages_free" in snap
+        assert "engine_kv_pool_pages_live" in snap
+        assert "engine_page_allocs_total" in snap
+
+        instants = [
+            {"name": e.name, "ts": e.ts, "args": e.args}
+            for e in events if e.ph == "i"
+        ]
+        kv = R.kv_pool_rollup(instants)
+        assert kv is not None
+        assert kv["peak_live_pages"] == eng.pool.peak_live
+        assert kv["final_live_pages"] == eng.pool.pages_live
+        assert kv["pages_allocated"] >= kv["pages_freed"] > 0
+        assert R.kv_pool_rollup([]) is None
