@@ -1,0 +1,24 @@
+"""Project-specific static verifier (``python -m repro.analysis``).
+
+Machine-checks the invariants this repo used to re-litigate in PR review
+(see CHANGES.md: the PR-5 ``np.asarray`` donation pin, the PR-4
+oversized-block config, the PR-2 backend-string drift):
+
+* donation discipline (RPR001/RPR002),
+* retrace/recompile hazards (RPR003),
+* ContextVar token discipline (RPR004),
+* backend-vocabulary drift against the live registry (RPR005),
+* dispatch-table closure (RPR101/RPR102),
+* VMEM-budget / lane / shared-bk config contracts (RPR201),
+* bench-artifact schema (RPR202).
+
+The AST layer (``ast_checks``/``donation``) never imports jax; the
+contract layer (``registry``/``configcheck``) imports the package but
+executes no kernels.  See DESIGN.md §8 for the invariant catalogue and
+the suppression policy (``# repro: noqa=RPR0xx -- reason``).
+"""
+
+from repro.analysis.cli import analyze_file, analyze_paths, main
+from repro.analysis.diagnostics import CODES, Diagnostic
+
+__all__ = ["CODES", "Diagnostic", "analyze_file", "analyze_paths", "main"]

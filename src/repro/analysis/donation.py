@@ -1,0 +1,343 @@
+"""Donation dataflow lint: use-after-donate and host-copy donation pins.
+
+Two hazards this repo has actually shipped (CHANGES.md, PR 5):
+
+* **RPR001 — use-after-donate.**  A buffer passed in a donated argnum
+  position of a ``jax.jit``-wrapped callable is invalidated by the call;
+  reading the same Python name afterwards (before rebinding it) touches a
+  deleted buffer at runtime.  The safe idiom rebinds in the same
+  statement: ``state = step(x, state)``.
+
+* **RPR002 — donation pin.**  ``np.asarray``/``np.array`` of a device
+  value pins a cached *host* copy; passing the result (directly or via a
+  local name) into a donated position silently disables donation — the
+  step still runs, just with a full extra copy of the state every call.
+  This is the PR-5 twin-trainer bug, now machine-checked.
+
+The analysis is intraprocedural but *module-aware* for bindings: a
+``self._step = jax.jit(fn, donate_argnums=(2,))`` in ``__init__`` is
+recognized at call sites in other methods (dotted names are matched
+textually — ``self._step`` is the same binding wherever it appears).
+``donate_argnums`` is resolved from integer literals, literal tuples, and
+simple conditional assignments (``donate = (2,) if flag else ()`` donates
+position 2 on the hazardous branch); positions that cannot be resolved
+statically are skipped rather than guessed.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator, Optional
+
+from repro.analysis.diagnostics import Diagnostic
+
+_NP_FUNCS = frozenset({"asarray", "array"})
+_JIT_ATTRS = frozenset({"jit", "pjit"})
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``self._step`` / ``step`` as a dotted string; None for non-chains."""
+
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _int_constants(node: ast.AST) -> set[int]:
+    return {
+        n.value
+        for n in ast.walk(node)
+        if isinstance(n, ast.Constant) and isinstance(n.value, int)
+        and not isinstance(n.value, bool)
+    }
+
+
+class _ModuleIndex(ast.NodeVisitor):
+    """Module-wide facts: import aliases and donated jit bindings."""
+
+    def __init__(self) -> None:
+        self.numpy_aliases: set[str] = set()
+        self.jax_aliases: set[str] = set()
+        self.np_func_names: set[str] = set()   # `from numpy import asarray`
+        self.jit_names: set[str] = set()       # `from jax import jit`
+        # dotted binding name -> donated positional indices
+        self.donated: dict[str, frozenset[int]] = {}
+        # name -> last simple assignment value (for donate_argnums=NAME)
+        self._assigns: dict[str, ast.AST] = {}
+
+    # -- imports ------------------------------------------------------------
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for a in node.names:
+            top = a.name.split(".")[0]
+            alias = a.asname or top
+            if top == "numpy":
+                self.numpy_aliases.add(alias)
+            if top == "jax":
+                self.jax_aliases.add(alias)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        for a in node.names:
+            name = a.asname or a.name
+            if mod.split(".")[0] == "numpy" and a.name in _NP_FUNCS:
+                self.np_func_names.add(name)
+            if mod.split(".")[0] == "jax" and a.name in _JIT_ATTRS:
+                self.jit_names.add(name)
+
+    # -- donated bindings ---------------------------------------------------
+
+    def is_jit_call(self, call: ast.Call) -> bool:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id in self.jit_names
+        if isinstance(f, ast.Attribute) and f.attr in _JIT_ATTRS:
+            base = dotted_name(f.value)
+            return base is not None and base.split(".")[0] in self.jax_aliases
+        return False
+
+    def is_np_copy_call(self, call: ast.Call) -> bool:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id in self.np_func_names
+        if isinstance(f, ast.Attribute) and f.attr in _NP_FUNCS:
+            base = dotted_name(f.value)
+            return base is not None and base in self.numpy_aliases
+        return False
+
+    def donate_positions(self, call: ast.Call) -> frozenset[int]:
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                value = kw.value
+                if isinstance(value, ast.Name) and value.id in self._assigns:
+                    value = self._assigns[value.id]
+                return frozenset(_int_constants(value))
+        return frozenset()
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        value = node.value
+        for target in node.targets:
+            name = dotted_name(target)
+            if name is not None and isinstance(target, ast.Name):
+                self._assigns[name] = value
+            if (
+                name is not None
+                and isinstance(value, ast.Call)
+                and self.is_jit_call(value)
+            ):
+                pos = self.donate_positions(value)
+                if pos:
+                    self.donated[name] = pos
+        self.generic_visit(node)
+
+
+def _statements(body: list[ast.stmt]) -> Iterator[ast.stmt]:
+    """Simple statements of a scope in textual order (compound statements
+    flattened; nested function/class scopes are opaque)."""
+
+    for stmt in body:
+        if isinstance(
+            stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            continue
+        if isinstance(stmt, (ast.If, ast.For, ast.AsyncFor, ast.While)):
+            yield stmt  # the header (test/iter) is part of this unit
+            yield from _statements(stmt.body)
+            yield from _statements(stmt.orelse)
+        elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+            yield stmt
+            yield from _statements(stmt.body)
+        elif isinstance(stmt, ast.Try):
+            yield from _statements(stmt.body)
+            for h in stmt.handlers:
+                yield from _statements(h.body)
+            yield from _statements(stmt.orelse)
+            yield from _statements(stmt.finalbody)
+        else:
+            yield stmt
+
+
+def _shallow_walk(stmt: ast.stmt) -> Iterator[ast.AST]:
+    """Walk a statement without descending into nested scopes or into the
+    bodies of compound statements (those are separate units)."""
+
+    if isinstance(stmt, (ast.If, ast.While)):
+        roots: list[ast.AST] = [stmt.test]
+    elif isinstance(stmt, (ast.For, ast.AsyncFor)):
+        roots = [stmt.target, stmt.iter]
+    elif isinstance(stmt, (ast.With, ast.AsyncWith)):
+        roots = list(stmt.items)
+    else:
+        roots = [stmt]
+    for root in roots:
+        for node in ast.walk(root):
+            if isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef,
+                       ast.Lambda)
+            ):
+                continue
+            yield node
+
+
+@dataclasses.dataclass
+class _Donation:
+    name: str          # dotted name of the donated buffer
+    unit: int          # statement-unit index of the donating call
+    line: int
+
+
+def _stores_and_loads(stmt: ast.stmt) -> tuple[set[str], list[tuple[str, int]]]:
+    stores: set[str] = set()
+    loads: list[tuple[str, int]] = []
+    for node in _shallow_walk(stmt):
+        if isinstance(node, (ast.Name, ast.Attribute)):
+            name = dotted_name(node)
+            if name is None:
+                continue
+            ctx = getattr(node, "ctx", None)
+            if isinstance(ctx, (ast.Store, ast.Del)):
+                stores.add(name)
+            elif isinstance(ctx, ast.Load) and isinstance(
+                node, ast.Name
+            ):
+                loads.append((name, node.lineno))
+            elif isinstance(ctx, ast.Load) and isinstance(node, ast.Attribute):
+                loads.append((name, node.lineno))
+    return stores, loads
+
+
+def check_scope(
+    path: str,
+    scope_body: list[ast.stmt],
+    index: _ModuleIndex,
+) -> list[Diagnostic]:
+    """Run the donation checks over one function (or module) body."""
+
+    diags: list[Diagnostic] = []
+    units = list(_statements(scope_body))
+    # name -> line of the np.asarray/np.array assignment it came from
+    host_copies: dict[str, int] = {}
+    donations: list[_Donation] = []
+
+    for i, stmt in enumerate(units):
+        for node in _shallow_walk(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            positions = _donated_positions_of_call(node, index)
+            if not positions:
+                continue
+            for p in sorted(positions):
+                if p >= len(node.args):
+                    continue
+                arg = node.args[p]
+                if isinstance(arg, ast.Call) and index.is_np_copy_call(arg):
+                    diags.append(
+                        Diagnostic(
+                            code="RPR002",
+                            path=path,
+                            line=arg.lineno,
+                            col=arg.col_offset,
+                            message=(
+                                "np host copy passed in donated argnum "
+                                f"{p}: the cached host buffer pins the "
+                                "value and silently disables donation"
+                            ),
+                        )
+                    )
+                    continue
+                name = dotted_name(arg)
+                if name is None:
+                    continue
+                if name in host_copies:
+                    diags.append(
+                        Diagnostic(
+                            code="RPR002",
+                            path=path,
+                            line=host_copies[name],
+                            message=(
+                                f"`{name}` is an np.asarray/np.array host "
+                                f"copy (line {host_copies[name]}) passed in "
+                                f"donated argnum {p} at line {node.lineno}: "
+                                "donation is silently disabled"
+                            ),
+                        )
+                    )
+                donations.append(_Donation(name=name, unit=i, line=node.lineno))
+
+        # Stores apply after the unit's RHS evaluated (so `x = step(x)`
+        # with a host-copy `x` is still caught above), then new host-copy
+        # origins are recorded.
+        stores, _ = _stores_and_loads(stmt)
+        for s in stores:
+            host_copies.pop(s, None)
+        if isinstance(stmt, ast.Assign) and isinstance(stmt.value, ast.Call):
+            if index.is_np_copy_call(stmt.value):
+                for target in stmt.targets:
+                    name = dotted_name(target)
+                    if name is not None:
+                        host_copies[name] = stmt.lineno
+
+    # use-after-donate: a Load of the donated name in a later unit, before
+    # the first unit that rebinds it.  A store in the donating unit itself
+    # (`state = step(x, state)` — the canonical safe idiom) rebinds
+    # immediately: the RHS is fully evaluated before the assignment.
+    for don in donations:
+        same_unit_stores, _ = _stores_and_loads(units[don.unit])
+        if don.name in same_unit_stores:
+            continue
+        for j in range(don.unit + 1, len(units)):
+            stores, loads = _stores_and_loads(units[j])
+            read = next((ln for (n, ln) in loads if n == don.name), None)
+            if read is not None:
+                diags.append(
+                    Diagnostic(
+                        code="RPR001",
+                        path=path,
+                        line=read,
+                        message=(
+                            f"`{don.name}` was donated at line {don.line} "
+                            "and is read here before being rebound: the "
+                            "buffer is invalidated by the donating call"
+                        ),
+                    )
+                )
+                break
+            if don.name in stores:
+                break
+    return diags
+
+
+def _donated_positions_of_call(
+    call: ast.Call, index: _ModuleIndex
+) -> frozenset[int]:
+    """Donated positions if this call invokes a donated binding (or an
+    inline ``jax.jit(..., donate_argnums=...)(args)``)."""
+
+    func = call.func
+    name = dotted_name(func)
+    if name is not None and name in index.donated:
+        return index.donated[name]
+    if isinstance(func, ast.Call) and index.is_jit_call(func):
+        return index.donate_positions(func)
+    return frozenset()
+
+
+def check_module(path: str, tree: ast.Module) -> list[Diagnostic]:
+    """Donation checks over every scope of a parsed module."""
+
+    index = _ModuleIndex()
+    index.visit(tree)
+    diags = check_scope(path, tree.body, index)
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            diags.extend(check_scope(path, node.body, index))
+    return diags
+
+
+__all__ = ["check_module", "dotted_name"]

@@ -1,0 +1,81 @@
+"""Registry contract checks: import the package, verify the tables.
+
+These checks import :mod:`repro.core.execution` and
+:mod:`repro.kernels.gemm` and inspect the dispatch tables *without
+executing any kernel* — pure dictionary closure properties:
+
+* **RPR101** — the violations :func:`repro.core.execution.validate_registry`
+  reports: ``BACKENDS``/``BACKEND_OPS`` agreement, a registered
+  ``INTERPRET_TWIN`` (the parity-harness route) for every entry,
+  ``LEAN_VARIANTS`` buffering-model sanity, and ``GEMM_KERNELS`` naming
+  only compiled GEMM dispatch entries.
+
+* **RPR102** — op families closed under
+  :func:`~repro.core.execution.align_backend_family`: remapping any
+  family member onto any other member's execution family (compiled or
+  interpret) must land inside the same family and inside the table.
+  This is the invariant that lets a tuning cache recorded on hardware be
+  replayed under interpret mode (and vice versa) without a name ever
+  escaping the registry.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.diagnostics import Diagnostic
+
+# Where registry findings anchor: the tables live here.
+_EXECUTION = "src/repro/core/execution.py"
+
+
+def check_registry() -> list[Diagnostic]:
+    from repro.core import execution as X
+
+    diags = [
+        Diagnostic(code="RPR101", path=_EXECUTION, line=1, message=p)
+        for p in X.validate_registry()
+    ]
+
+    # Family closure under align_backend_family.  Skip if the base tables
+    # are already broken (RPR101 reported above) — closure errors would
+    # only repeat the same root cause.
+    if diags:
+        return diags
+    families: dict[str, list[str]] = {}
+    for name, op in X.BACKEND_OPS.items():
+        families.setdefault(op, []).append(name)
+    for op, members in families.items():
+        for variant in members:
+            for requested in members:
+                try:
+                    mapped = X.align_backend_family(variant, requested)
+                except Exception as e:  # a raise is itself a closure break
+                    diags.append(
+                        Diagnostic(
+                            code="RPR102",
+                            path=_EXECUTION,
+                            line=1,
+                            message=(
+                                f"align_backend_family({variant!r}, "
+                                f"{requested!r}) raised {type(e).__name__}: {e}"
+                            ),
+                        )
+                    )
+                    continue
+                if mapped not in X.BACKENDS or X.BACKEND_OPS[mapped] != op:
+                    diags.append(
+                        Diagnostic(
+                            code="RPR102",
+                            path=_EXECUTION,
+                            line=1,
+                            message=(
+                                f"{op} family not closed: "
+                                f"align_backend_family({variant!r}, "
+                                f"{requested!r}) = {mapped!r} escapes the "
+                                "family"
+                            ),
+                        )
+                    )
+    return diags
+
+
+__all__ = ["check_registry"]

@@ -240,6 +240,89 @@ def align_backend_family(variant: str, requested: str) -> str:
     return _COMPILED_TWIN.get(variant, variant)
 
 
+def backend_vocabulary() -> frozenset[str]:
+    """Every backend token the stack accepts anywhere: the dispatch-table
+    names plus the ``"auto"`` request.  The static analyzer's drift
+    detector (RPR005) is keyed off this, so the lint vocabulary can never
+    diverge from the live registry."""
+
+    return frozenset(BACKENDS) | {"auto"}
+
+
+def validate_registry() -> list[str]:
+    """Statically verify the dispatch tables' closure invariants.
+
+    Returns a list of human-readable violations (empty == healthy).  Ran
+    by the ``repro.analysis`` registry pass and by a fast unit test, so a
+    new backend that forgets its twin/family registration fails at
+    import-check time instead of deep inside dispatch.  Checks:
+
+    * ``BACKENDS`` and ``BACKEND_OPS`` name exactly the same entries, and
+      every op-family tag is known;
+    * ``INTERPRET_TWIN`` covers every entry, maps into the table, keeps
+      the op family, and is idempotent (a twin is its own twin) — the
+      parity harness walks this map, so these are its route guarantees;
+    * ``LEAN_VARIANTS`` maps double-buffered entries to single-buffered
+      entries of the same family;
+    * ``kernels.gemm.GEMM_KERNELS`` (the tuner's search dimension) names
+      only compiled GEMM-family dispatch entries.
+    """
+
+    problems: list[str] = []
+    known_ops = {"gemm", "paged_attn"}
+    if set(BACKENDS) != set(BACKEND_OPS):
+        problems.append(
+            f"BACKENDS/BACKEND_OPS disagree: "
+            f"{sorted(set(BACKENDS) ^ set(BACKEND_OPS))}"
+        )
+    for name, op in BACKEND_OPS.items():
+        if op not in known_ops:
+            problems.append(f"BACKEND_OPS[{name!r}] = {op!r} is not a known op family")
+    if set(INTERPRET_TWIN) != set(BACKENDS):
+        problems.append(
+            f"INTERPRET_TWIN does not cover BACKENDS exactly: "
+            f"{sorted(set(INTERPRET_TWIN) ^ set(BACKENDS))}"
+        )
+    for name, twin in INTERPRET_TWIN.items():
+        if twin not in BACKENDS:
+            problems.append(f"INTERPRET_TWIN[{name!r}] = {twin!r} not in BACKENDS")
+            continue
+        if BACKEND_OPS.get(name) != BACKEND_OPS.get(twin):
+            problems.append(
+                f"INTERPRET_TWIN[{name!r}] = {twin!r} crosses op families"
+            )
+        if INTERPRET_TWIN.get(twin) != twin:
+            problems.append(
+                f"interpret twin {twin!r} (of {name!r}) is not its own twin"
+            )
+    for name, lean in LEAN_VARIANTS.items():
+        if name not in BACKENDS or lean not in BACKENDS:
+            problems.append(f"LEAN_VARIANTS {name!r} -> {lean!r} not in BACKENDS")
+            continue
+        if BACKEND_OPS[name] != BACKEND_OPS[lean]:
+            problems.append(
+                f"LEAN_VARIANTS {name!r} -> {lean!r} crosses op families"
+            )
+        if not backend_double_buffers(name) or backend_double_buffers(lean):
+            problems.append(
+                f"LEAN_VARIANTS {name!r} -> {lean!r} must map a "
+                "double-buffered entry to a single-buffered one"
+            )
+    from repro.kernels.gemm import GEMM_KERNELS
+
+    for name in GEMM_KERNELS:
+        if name not in BACKENDS:
+            problems.append(f"GEMM_KERNELS entry {name!r} not in BACKENDS")
+        elif BACKEND_OPS[name] != "gemm":
+            problems.append(f"GEMM_KERNELS entry {name!r} is not a GEMM backend")
+        elif name.endswith("_interpret"):
+            problems.append(
+                f"GEMM_KERNELS entry {name!r} is an interpret twin — the "
+                "variant registry holds compiled kernels only"
+            )
+    return problems
+
+
 def on_tpu() -> bool:
     """The auto-probe: is the default JAX backend a TPU?"""
 
@@ -816,6 +899,8 @@ __all__ = [
     "align_backend_family",
     "backend_double_buffers",
     "backend_op",
+    "backend_vocabulary",
+    "validate_registry",
     "class_sharded",
     "compat_shard_map",
     "context_for_tree",

@@ -62,8 +62,10 @@ from repro.core.blocking import BlockConfig, _round_up, pad_to_blocks
 
 # Block dims may not exceed the problem rounded up to this lane tile: a
 # bigger block silently multiplies padded FLOPs (a cache entry from the
-# wrong bucket, a hand-typed config) instead of helping.
-_LANE = 128
+# wrong bucket, a hand-typed config) instead of helping.  ``LANE`` is the
+# public name — ``repro.analysis.configcheck`` enforces the same
+# padded-problem bound on committed tuning-cache entries with it.
+LANE = _LANE = 128
 
 
 def resolve_block_config(
@@ -340,6 +342,7 @@ GEMM_KERNELS = {
 
 __all__ = [
     "GEMM_KERNELS",
+    "LANE",
     "gemm_pallas",
     "gemm_pallas_lean",
     "gemm_pallas_jit",

@@ -37,6 +37,12 @@ from repro.core.execution import backend_double_buffers
 # "thousands of tiny blocks" below "tens of large blocks".
 GRID_STEP_OVERHEAD_S = 1e-6
 
+# The measurement-backend vocabulary (a *scorer* name, not a kernel
+# backend — ``execution.BACKENDS`` is that other, disjoint vocabulary).
+# ``repro.analysis``'s drift detector admits these tokens alongside the
+# kernel registry so ``--backend cost-model`` CLI plumbing stays legal.
+MEASURE_BACKEND_NAMES: tuple[str, ...] = ("cost-model", "wallclock")
+
 
 @dataclasses.dataclass(frozen=True)
 class CostBreakdown:
@@ -203,6 +209,7 @@ def make_backend(
 
 __all__ = [
     "GRID_STEP_OVERHEAD_S",
+    "MEASURE_BACKEND_NAMES",
     "CostBreakdown",
     "cost_breakdown",
     "cost_model_time",

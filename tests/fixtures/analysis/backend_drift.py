@@ -1,0 +1,25 @@
+"""Fixture: the PR-2 backend-string drift bug class (RPR005).
+
+Every literal below is a misspelled or legacy backend token the registry
+does not know; each trigger form gets one.
+"""
+
+from repro.core.execution import BACKENDS, resolve_backend
+
+
+def pick(backend):
+    if backend == "palas":  # line 11: RPR005 (comparison)
+        return run(backend="palas_lean")  # line 12: RPR005 (keyword)
+    fn = BACKENDS["mosaic"]  # line 13: RPR005 (registry subscript)
+    resolve_backend("xla_lite")  # line 14: RPR005 (funnel argument)
+    return fn
+
+
+def valid_tokens_pass(backend):
+    if backend == "pallas_lean":
+        return run(backend="xla")
+    return resolve_backend("auto")
+
+
+def run(backend):
+    return backend

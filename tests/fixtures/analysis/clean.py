@@ -1,0 +1,29 @@
+"""Fixture: idiomatic code every pass must leave untouched."""
+
+import jax
+import numpy as np
+
+
+def _train_step(params, batch, state):
+    return state
+
+
+STEP = jax.jit(_train_step, donate_argnums=(2,))
+
+
+def train(params, batches, state):
+    # Same-statement rebind: donation-safe; jit hoisted out of the loop.
+    for batch in batches:
+        state = STEP(params, batch, state)
+    return state
+
+
+def export(state):
+    # Host copy of a *non-donated* value is fine.
+    return np.asarray(state)
+
+
+def pick(backend):
+    if backend == "pallas_lean":
+        return "lean"
+    return "pipelined"

@@ -1,0 +1,36 @@
+"""Fixture: raw ContextVar.set outside the blessed helpers (RPR004)."""
+
+import contextvars
+
+_MODE = contextvars.ContextVar("mode", default=None)
+
+
+def leaks_ambient_state(mode):
+    _MODE.set(mode)  # line 9: RPR004 — no paired reset anywhere
+    return compute()
+
+
+def paired_with_finally(mode):
+    token = _MODE.set(mode)  # paired: reset in finally — not flagged
+    try:
+        return compute()
+    finally:
+        _MODE.reset(token)
+
+
+class ModeScope:
+    def __init__(self, mode):
+        self._mode = mode
+        self._token = None
+
+    def __enter__(self):
+        self._token = _MODE.set(self._mode)  # paired via __exit__ below
+        return self
+
+    def __exit__(self, *exc):
+        _MODE.reset(self._token)
+        return False
+
+
+def compute():
+    return _MODE.get()

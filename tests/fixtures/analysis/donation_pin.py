@@ -1,0 +1,38 @@
+"""Fixture: the PR-5 donation-pin bug class (RPR002) + use-after-donate.
+
+Never imported — parsed by the analyzer only.  Line numbers are asserted
+by tests/test_analysis.py; keep edits append-only or update the tests.
+"""
+
+import jax
+import numpy as np
+
+
+def _step_fn(params, batch, state):
+    return state
+
+
+STEP = jax.jit(_step_fn, donate_argnums=(2,))
+
+
+def train_pinned_direct(params, batch, state):
+    # np host copy handed straight into the donated position.
+    return STEP(params, batch, np.asarray(state))  # line 20: RPR002
+
+
+def train_pinned_via_name(params, batch, state):
+    host_state = np.asarray(state)  # line 24: RPR002 (origin of the pin)
+    state = STEP(params, batch, host_state)
+    return state
+
+
+def train_use_after_donate(params, batch, state):
+    new_state = STEP(params, batch, state)
+    loss = state.mean()  # line 31: RPR001 — `state` was donated above
+    return new_state, loss
+
+
+def train_safe(params, batch, state):
+    # The canonical safe idiom: rebind in the donating statement.
+    state = STEP(params, batch, state)
+    return state.mean(), state

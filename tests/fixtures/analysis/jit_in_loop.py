@@ -1,0 +1,25 @@
+"""Fixture: jit/pallas_call constructed per loop iteration (RPR003)."""
+
+import jax
+import jax.experimental.pallas as pl
+
+
+def retraces_every_pass(xs, kernel):
+    outs = []
+    for x in xs:
+        f = jax.jit(lambda v: v * 2)  # line 10: RPR003
+        call = pl.pallas_call(kernel, out_shape=x)  # line 11: RPR003
+        outs.append(f(call))
+    return outs
+
+
+def hoisted_is_fine(xs):
+    f = jax.jit(lambda v: v * 2)
+    return [f(x) for x in xs]
+
+
+def nested_def_resets_scope(xs):
+    for _ in xs:
+        def helper(v):
+            return jax.jit(lambda u: u)(v)  # nested scope: not flagged
+    return helper

@@ -1,0 +1,29 @@
+"""Fixture: suppression semantics.
+
+One justified noqa (silences its finding), one reason-less noqa (is
+itself the finding, RPR000), one multi-line statement carrying its noqa
+on a continuation line.
+"""
+
+import jax
+
+
+def justified(xs):
+    for x in xs:
+        f = jax.jit(lambda v: v)  # repro: noqa=RPR003 -- fixture: shape changes every pass anyway
+        yield f(x)
+
+
+def reasonless(xs):
+    for x in xs:
+        f = jax.jit(lambda v: v)  # repro: noqa=RPR003
+        yield f(x)
+
+
+def continuation_line(xs, kernel):
+    for x in xs:
+        call = jax.jit(
+            kernel,
+            static_argnums=(1,),
+        )  # repro: noqa=RPR003 -- fixture: noqa rides the closing paren
+        yield call(x, 0)

@@ -241,7 +241,7 @@ def test_parse_shapes_rejects_garbage():
 def _write_cache(tmp_path, cfg, m, k, n, dtype_name="float32"):
     path = str(tmp_path / "cache.json")
     cache = C.TuningCache(path=path)
-    cache.put("tpu-v5e", dtype_name, m, k, n, cfg, backend="test")
+    cache.put("tpu-v5e", dtype_name, m, k, n, cfg, backend="test")  # repro: noqa=RPR005 -- fixture provenance label, not a dispatch token
     cache.save()
     return path
 
