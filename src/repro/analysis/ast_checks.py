@@ -23,7 +23,12 @@
   comparison or ``in`` test against a ``*backend``-named expression, a
   subscript of a registry table) whose value is outside the vocabulary
   the caller passes in — which the CLI builds from the *live* registries,
-  so the lint can never itself drift from the code.
+  so the lint can never itself drift from the code.  The same pass guards
+  the *objective* vocabulary (``schedule.OBJECTIVES`` — perf/energy/edp):
+  an ``objective=`` keyword or a comparison against an
+  ``objective``-named expression with a literal outside the live tuple is
+  the identical bug class (a misspelled ``"engery"`` silently selecting
+  the default objective).
 """
 
 from __future__ import annotations
@@ -65,6 +70,14 @@ def _is_backend_named(node: ast.AST) -> bool:
     return last == "backend" or any(
         last == h or last.endswith("_" + h) for h in _BACKEND_NAME_HINTS
     )
+
+
+def _is_objective_named(node: ast.AST) -> bool:
+    name = dotted_name(node)
+    if name is None:
+        return False
+    last = name.split(".")[-1]
+    return last == "objective" or last.endswith("_objective")
 
 
 # ---------------------------------------------------------------------------
@@ -259,9 +272,15 @@ def _str_literals(node: ast.AST) -> list[ast.Constant]:
 
 
 class _BackendDriftVisitor(ast.NodeVisitor):
-    def __init__(self, path: str, vocabulary: frozenset[str]):
+    def __init__(
+        self,
+        path: str,
+        vocabulary: frozenset[str],
+        objectives: Optional[frozenset[str]] = None,
+    ):
         self.path = path
         self.vocab = vocabulary
+        self.objectives = objectives
         self.diags: list[Diagnostic] = []
 
     def _check(self, lit: ast.Constant, where: str) -> None:
@@ -280,6 +299,22 @@ class _BackendDriftVisitor(ast.NodeVisitor):
                 )
             )
 
+    def _check_objective(self, lit: ast.Constant, where: str) -> None:
+        if self.objectives is not None and lit.value not in self.objectives:
+            self.diags.append(
+                Diagnostic(
+                    code="RPR005",
+                    path=self.path,
+                    line=lit.lineno,
+                    col=lit.col_offset,
+                    message=(
+                        f"objective name {lit.value!r} ({where}) is not in "
+                        "the scheduling-objective vocabulary "
+                        "(schedule.OBJECTIVES) — fix the drift"
+                    ),
+                )
+            )
+
     def visit_Call(self, node: ast.Call) -> None:
         callee = dotted_name(node.func)
         last = callee.split(".")[-1] if callee else ""
@@ -288,10 +323,17 @@ class _BackendDriftVisitor(ast.NodeVisitor):
                 if kw.arg in ("backend", "kernel_backend"):
                     for lit in _str_literals(kw.value):
                         self._check(lit, f"keyword {kw.arg}=")
+                elif kw.arg == "objective":
+                    for lit in _str_literals(kw.value):
+                        self._check_objective(lit, "keyword objective=")
         if last in _BACKEND_FUNCS:
             for arg in node.args:
                 for lit in _str_literals(arg):
                     self._check(lit, f"argument of {last}")
+        if last == "validate_objective":
+            for arg in node.args:
+                for lit in _str_literals(arg):
+                    self._check_objective(lit, f"argument of {last}")
         self.generic_visit(node)
 
     def visit_Compare(self, node: ast.Compare) -> None:
@@ -301,6 +343,10 @@ class _BackendDriftVisitor(ast.NodeVisitor):
             for s in sides:
                 for lit in _str_literals(s):
                     self._check(lit, "comparison with a backend value")
+        elif any(_is_objective_named(s) for s in sides):
+            for s in sides:
+                for lit in _str_literals(s):
+                    self._check_objective(lit, "comparison with an objective value")
         self.generic_visit(node)
 
     def visit_Subscript(self, node: ast.Subscript) -> None:
@@ -312,9 +358,12 @@ class _BackendDriftVisitor(ast.NodeVisitor):
 
 
 def check_backend_drift(
-    path: str, tree: ast.Module, vocabulary: frozenset[str]
+    path: str,
+    tree: ast.Module,
+    vocabulary: frozenset[str],
+    objectives: Optional[frozenset[str]] = None,
 ) -> list[Diagnostic]:
-    v = _BackendDriftVisitor(path, vocabulary)
+    v = _BackendDriftVisitor(path, vocabulary, objectives)
     v.visit(tree)
     return v.diags
 
@@ -326,7 +375,10 @@ def check_loop_jit(path: str, tree: ast.Module) -> list[Diagnostic]:
 
 
 def run_ast_checks(
-    path: str, source: str, vocabulary: frozenset[str]
+    path: str,
+    source: str,
+    vocabulary: frozenset[str],
+    objectives: Optional[frozenset[str]] = None,
 ) -> list[Diagnostic]:
     """All AST passes (donation included) over one file's source."""
 
@@ -337,7 +389,7 @@ def run_ast_checks(
     diags.extend(donation.check_module(path, tree))
     diags.extend(check_loop_jit(path, tree))
     diags.extend(check_contextvar_sets(path, tree))
-    diags.extend(check_backend_drift(path, tree, vocabulary))
+    diags.extend(check_backend_drift(path, tree, vocabulary, objectives))
     return diags
 
 

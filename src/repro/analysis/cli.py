@@ -53,6 +53,18 @@ def build_vocabulary() -> frozenset[str]:
     return frozenset(backend_vocabulary()) | frozenset(MEASURE_BACKEND_NAMES)
 
 
+def build_objectives() -> frozenset[str]:
+    """The scheduling-objective vocabulary, keyed off the live tuple.
+
+    Sourced from ``repro.core.schedule.OBJECTIVES`` so the drift check
+    can never disagree with what ``validate_objective`` accepts.
+    """
+
+    from repro.core.schedule import OBJECTIVES
+
+    return frozenset(OBJECTIVES)
+
+
 def discover(paths: list[str]) -> tuple[list[str], list[str]]:
     """(.py files, .json files) under the given paths, fixtures pruned."""
 
@@ -77,16 +89,20 @@ def discover(paths: list[str]) -> tuple[list[str], list[str]]:
 
 
 def analyze_file(
-    path: str, vocabulary: Optional[frozenset[str]] = None
+    path: str,
+    vocabulary: Optional[frozenset[str]] = None,
+    objectives: Optional[frozenset[str]] = None,
 ) -> list[Diagnostic]:
     """All applicable AST passes + suppressions for one Python file."""
 
     if vocabulary is None:
         vocabulary = build_vocabulary()
+    if objectives is None:
+        objectives = build_objectives()
     with open(path, encoding="utf-8") as f:
         source = f.read()
     try:
-        diags = ast_checks.run_ast_checks(path, source, vocabulary)
+        diags = ast_checks.run_ast_checks(path, source, vocabulary, objectives)
     except SyntaxError as e:
         # Not our diagnostic to own: surface as a hard error.
         raise SystemExit(f"{path}: cannot parse: {e}") from e
@@ -99,15 +115,18 @@ def analyze_paths(
     contracts: bool = True,
     artifacts: Optional[str] = None,
     vocabulary: Optional[frozenset[str]] = None,
+    objectives: Optional[frozenset[str]] = None,
 ) -> list[Diagnostic]:
     """The full analyzer: AST passes over ``paths`` + contract checks."""
 
     if vocabulary is None:
         vocabulary = build_vocabulary()
+    if objectives is None:
+        objectives = build_objectives()
     diags: list[Diagnostic] = []
     py_files, json_files = discover(paths)
     for path in py_files:
-        diags.extend(analyze_file(path, vocabulary))
+        diags.extend(analyze_file(path, vocabulary, objectives))
     for path in json_files:
         diags.extend(configcheck.check_tuning_cache_file(path))
     if contracts:

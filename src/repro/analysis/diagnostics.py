@@ -38,8 +38,9 @@ CODES: dict[str, str] = {
               "(per-iteration retrace/recompile hazard)",
     "RPR004": "raw ContextVar.set without token-reset-in-finally outside the "
               "blessed helpers (execution.py / trace.py discipline)",
-    "RPR005": "backend-name string literal outside the registry vocabulary "
-              "(execution.BACKENDS drift)",
+    "RPR005": "backend-name or scheduling-objective string literal outside "
+              "the live vocabulary (execution.BACKENDS / schedule.OBJECTIVES "
+              "drift)",
     "RPR101": "backend-registry closure violation (BACKENDS / BACKEND_OPS / "
               "INTERPRET_TWIN / LEAN_VARIANTS)",
     "RPR102": "kernel-family closure violation (GEMM_KERNELS / paged-attn "

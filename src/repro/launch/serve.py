@@ -234,6 +234,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=8)
     ap.add_argument("--strategy", default="ca-das")
+    ap.add_argument("--objective", default="perf", choices=["perf", "energy", "edp"],
+                    help="scheduling objective: perf (default, bit-identical "
+                         "to before), energy (park inefficient pods at low "
+                         "load, weight shares by joules/unit), or edp")
     ap.add_argument("--device-class", default=None,
                     help="serve under this class's control tree (default: fastest)")
     ap.add_argument("--class-sharded", default="auto", choices=["auto", "on", "off"],
@@ -284,7 +288,9 @@ def main():
 
     # Asymmetric request routing: split the request batch across classes.
     asym = AsymmetricMesh(biglittle_classes(chips_per_pod=1), strategy=args.strategy,
-                          batch_tile=1)
+                          batch_tile=1, objective=args.objective)
+    if args.one_shot and args.objective != "perf":
+        raise SystemExit("--objective applies to the engine path only")
     if args.class_sharded == "on" and args.device_class is not None:
         raise SystemExit(
             "--class-sharded on serves every class simultaneously; "
@@ -323,6 +329,7 @@ def main():
     summary = {
         "arch": cfg.name,
         "path": "one-shot" if args.one_shot else "engine",
+        "objective": args.objective,
         "device_class": device_class,
         "exec_backend": exec_backend,
         "class_sharded": shard_classes is not None,

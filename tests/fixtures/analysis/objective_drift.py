@@ -1,0 +1,27 @@
+"""Fixture: scheduling-objective string drift (RPR005, objective arm).
+
+Every literal below is a misspelled or invented objective the live
+``schedule.OBJECTIVES`` tuple does not know; each trigger form gets one.
+"""
+
+from repro.core.schedule import validate_objective
+
+
+def pick(objective):
+    if objective == "engery":  # line 11: RPR005 (comparison)
+        return run(objective="performance")  # line 12: RPR005 (keyword)
+    validate_objective("edp2")  # line 13: RPR005 (funnel argument)
+    return objective
+
+
+def valid_tokens_pass(objective, ap):
+    if objective == "energy":
+        return run(objective="perf")
+    validate_objective("edp")
+    # argparse enumerates its own choices; strings here are exempt.
+    ap.add_argument("--objective", choices=("perf", "energy", "edp2"))
+    return objective
+
+
+def run(objective):
+    return objective

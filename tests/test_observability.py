@@ -424,12 +424,13 @@ class TestEngineTelemetry:
         )
         snap = eng.stats.snapshot()
         json.dumps(snap)
-        # Every dataclass field plus the derived throughput, nothing
-        # hand-mirrored: new fields show up here automatically.
+        # Every dataclass field plus the derived throughput/efficiency
+        # metrics, nothing hand-mirrored: new fields show up here
+        # automatically.
         import dataclasses as dc
 
         assert set(snap) == {f.name for f in dc.fields(eng.stats)} | {
-            "tokens_per_s"
+            "tokens_per_s", "tokens_per_j", "modeled_tokens_per_s"
         }
 
     def test_traced_generate_emits_spans_and_metrics(self, small_model):

@@ -159,6 +159,37 @@ class TestDynamicScheduler:
         d = S.DynamicScheduler(2)
         assert d.drift() == float("inf") and d.needs_rebalance()
 
+    def test_observe_rejects_wrong_arity(self):
+        # Regression: a caller passing per-pod lists to a per-class
+        # scheduler used to corrupt the rate vector silently (numpy
+        # broadcast); now it is a hard error naming both lengths.
+        d = S.DynamicScheduler(2, init_ratios=[1.0, 1.0], tiles=[1, 1])
+        with pytest.raises(ValueError, match="expects 2 per-class"):
+            d.observe([10, 10, 10], [0.1, 0.1, 0.1])
+        with pytest.raises(ValueError):
+            d.observe([10, 10], [0.1, 0.1, 0.1])
+        with pytest.raises(ValueError):
+            d.observe([10], [0.1, 0.1])
+
+    def test_drift_floored_class_does_not_thrash(self):
+        # Regression: drift used to normalize each class's share delta by
+        # its OWN reference share, so a class pinned at the 2% starvation
+        # floor turned ±50% jitter in its tiny rate into ~50% "drift" and
+        # re-partitioned every step.  Normalizing by the max reference
+        # share keeps sub-threshold absolute movement sub-threshold.
+        d = S.DynamicScheduler(2, init_ratios=[1.0, 1e-6], tiles=[1, 1],
+                               rebalance_threshold=0.05)
+        d.observe([10, 0], [0.1, 0.1])        # floors class 1 at 2%
+        d.table(100)
+        floor_rate = d.rates[1]
+        d.rates = np.array([d.rates[0], floor_rate * 1.5])  # 50% jitter
+        assert d.drift() < 0.05
+        assert not d.needs_rebalance()
+        # A genuine shift in the class *ratio* still releases: the small
+        # class growing to 20% of the big one moves the split ~15%.
+        d.rates = np.array([d.rates[0], d.rates[0] * 0.2])
+        assert d.needs_rebalance()
+
     def test_balanced_ratio(self):
         assert S.balanced_ratio([9.6, 2.4]) == pytest.approx(4.0)
 
