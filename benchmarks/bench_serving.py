@@ -192,19 +192,24 @@ def paged_ab(cfg, params, gen_len, seq_cap, reps, *, slots_per_pod=8,
     }
 
 
-def objective_ab(cfg, params, gen_len, seq_cap, reps, *, objective="energy",
-                 wave=3, prompt_len=8, slots_per_pod=4):
-    """``perf`` vs energy-objective engine A/B at low offered load.
+def objective_ab(cfg, params, gen_len, seq_cap, reps, *,
+                 objectives=("energy",), wave=3, prompt_len=8,
+                 slots_per_pod=4):
+    """``perf`` vs objective-engine A/B at low offered load.
 
-    Both sides serve identical low-depth request waves (``wave`` requests
-    against ``2 × slots_per_pod`` slots — the regime where the energy
-    objective parks the big pod and serves from little).  Compared on the
+    Every side serves identical low-depth request waves (``wave`` requests
+    against ``2 × slots_per_pod`` slots — the regime where the non-perf
+    objectives park the big pod and serve from little).  Compared on the
     *modeled* power-clock columns (``energy_j`` / ``tokens_per_j`` /
     ``modeled_tokens_per_s``), which are deterministic across hosts; the
-    wall-clock SPMD program is the same on both sides, so tokens are
+    wall-clock SPMD program is the same on every side, so tokens are
     asserted bit-identical and the existing speedup gate is untouched.
-    The check gate asserts the objective actually buys joules
-    (``energy_ratio`` strictly < 1) at a bounded modeled-throughput loss.
+    The single ``perf`` reference run is shared across all requested
+    ``objectives``; one block per objective is returned, each carrying the
+    shared perf columns so every block is self-contained (the RPR202
+    artifact shape).  The check gate asserts the requested objective
+    actually buys joules (``energy_ratio`` strictly < 1) at a bounded
+    modeled-throughput loss.
     """
 
     from repro.runtime.serving import ServingEngine
@@ -226,20 +231,6 @@ def objective_ab(cfg, params, gen_len, seq_cap, reps, *, objective="energy",
             outs.append(eng.generate(prompts, gen_len))
         return eng, outs
 
-    perf_eng, perf_outs = side("perf")
-    obj_eng, obj_outs = side(objective)
-    for a, b in zip(perf_outs, obj_outs):
-        assert np.array_equal(a, b), (
-            f"{objective}-objective tokens diverged from perf"
-        )
-
-    ps, os_ = perf_eng.stats, obj_eng.stats
-    energy_ratio = os_.energy_j / ps.energy_j if ps.energy_j else 0.0
-    throughput_ratio = (
-        os_.modeled_tokens_per_s / ps.modeled_tokens_per_s
-        if ps.modeled_tokens_per_s else 0.0
-    )
-
     def cols(st):
         return {
             "energy_j": round(st.energy_j, 4),
@@ -249,17 +240,33 @@ def objective_ab(cfg, params, gen_len, seq_cap, reps, *, objective="energy",
             "pod_unparks": st.pod_unparks,
         }
 
-    return {
-        "objective": objective,
-        "wave": wave,
-        "reps": reps,
-        "gen_len": gen_len,
-        "perf": cols(ps),
-        objective: cols(os_),
-        "tokens_identical": True,
-        "energy_ratio": round(energy_ratio, 3),
-        "throughput_ratio": round(throughput_ratio, 3),
-    }
+    perf_eng, perf_outs = side("perf")
+    ps = perf_eng.stats
+    blocks = {}
+    for objective in objectives:
+        obj_eng, obj_outs = side(objective)
+        for a, b in zip(perf_outs, obj_outs):
+            assert np.array_equal(a, b), (
+                f"{objective}-objective tokens diverged from perf"
+            )
+        os_ = obj_eng.stats
+        energy_ratio = os_.energy_j / ps.energy_j if ps.energy_j else 0.0
+        throughput_ratio = (
+            os_.modeled_tokens_per_s / ps.modeled_tokens_per_s
+            if ps.modeled_tokens_per_s else 0.0
+        )
+        blocks[objective] = {
+            "objective": objective,
+            "wave": wave,
+            "reps": reps,
+            "gen_len": gen_len,
+            "perf": cols(ps),
+            objective: cols(os_),
+            "tokens_identical": True,
+            "energy_ratio": round(energy_ratio, 3),
+            "throughput_ratio": round(throughput_ratio, 3),
+        }
+    return blocks
 
 
 def run(arch: str = "internlm2-1.8b", batch: int = 8, prompt_len: int = 8,
@@ -354,20 +361,31 @@ def run(arch: str = "internlm2-1.8b", batch: int = 8, prompt_len: int = 8,
             1e6 / max(ab["paged"]["tokens_per_s"], 1e-9),
             f"tokens_per_s={ab['paged']['tokens_per_s']:.1f} "
             f"memory_reduction={ab['memory_reduction']:.2f}"))
+    records = [record]
     if objective:
-        # The energy-objective A/B on the modeled power clock: lower
-        # modeled joules than the perf run on the same trace, tokens
-        # bit-identical.  Gated under --check (energy_ratio < 1 at a
-        # bounded modeled-throughput loss).
-        ab = objective_ab(cfg, params, gen_len, seq_cap, reps,
-                          objective=objective)
-        record["objective_ab"] = ab
-        rows.append(Row(
-            f"serve_engine_{objective}", 0.0,
-            f"energy_ratio={ab['energy_ratio']:.3f} "
-            f"throughput_ratio={ab['throughput_ratio']:.3f} "
-            f"tokens_per_j={ab[objective]['tokens_per_j']:.3f}"))
-    path = write_json("BENCH_serving.json", [record], bench="serving",
+        # The objective A/B on the modeled power clock: lower modeled
+        # joules than the perf run on the same trace, tokens bit-identical.
+        # Both non-perf objectives run against ONE shared perf reference;
+        # the requested one lands in this record's ``objective_ab`` (and
+        # is what --check gates), the other becomes its own informational
+        # record so BENCH_serving.json always carries the energy-vs-edp
+        # comparison.
+        both = ("energy", "edp")
+        blocks = objective_ab(cfg, params, gen_len, seq_cap, reps,
+                              objectives=both)
+        record["objective_ab"] = blocks[objective]
+        for obj in both:
+            ab = blocks[obj]
+            if obj != objective:
+                records.append(
+                    {"name": f"serve_objective_{obj}", "objective_ab": ab}
+                )
+            rows.append(Row(
+                f"serve_engine_{obj}", 0.0,
+                f"energy_ratio={ab['energy_ratio']:.3f} "
+                f"throughput_ratio={ab['throughput_ratio']:.3f} "
+                f"tokens_per_j={ab[obj]['tokens_per_j']:.3f}"))
+    path = write_json("BENCH_serving.json", records, bench="serving",
                       arch=cfg.name)
     print(f"wrote {path}")
     return rows

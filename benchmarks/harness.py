@@ -89,15 +89,14 @@ def write_json(fname: str, records: list[dict], **meta) -> str:
     [...]}`` — one record per measured cell, plus run provenance
     (``run_metadata`` fields merged with the keyword extras)."""
 
-    import json
+    from repro.util.atomic import atomic_write_json
 
     os.makedirs(ART_DIR, exist_ok=True)
     path = os.path.join(ART_DIR, fname)
-    with open(path, "w") as f:
-        json.dump({"meta": run_metadata(**meta), "records": records},
-                  f, indent=1, sort_keys=True)
-        f.write("\n")
-    return path
+    return atomic_write_json(
+        path, {"meta": run_metadata(**meta), "records": records},
+        indent=1, sort_keys=True,
+    )
 
 
 def load_records(path: str) -> list:

@@ -29,6 +29,17 @@
   ``objective``-named expression with a literal outside the live tuple is
   the identical bug class (a misspelled ``"engery"`` silently selecting
   the default objective).
+
+* **RPR006 — fault-point drift.**  The fleet's fault-injection registry
+  (``runtime.faults.FAULT_POINTS``) is the vocabulary every injection
+  site and every :class:`FaultPlan` speaks; a misspelled point name
+  (``"pod_deth"``) would silently never fire — the worst failure mode a
+  *fault-injection* test can have, since the run then passes by testing
+  nothing.  Flagged: positional string arguments of the funnels
+  (``fault_active`` / ``validate_point``), a ``point=`` keyword
+  (``FaultEvent`` construction), and string subscripts of
+  ``FAULT_POINTS`` — whenever the literal is outside the vocabulary the
+  CLI builds from the *live* registry.
 """
 
 from __future__ import annotations
@@ -368,6 +379,66 @@ def check_backend_drift(
     return v.diags
 
 
+# ---------------------------------------------------------------------------
+# RPR006: fault-point drift against the live FAULT_POINTS registry
+# ---------------------------------------------------------------------------
+
+# Funnels whose positional string arguments name an injection point.
+_FAULT_FUNCS = frozenset({"fault_active", "validate_point"})
+
+
+class _FaultPointDriftVisitor(ast.NodeVisitor):
+    def __init__(self, path: str, fault_points: frozenset[str]):
+        self.path = path
+        self.points = fault_points
+        self.diags: list[Diagnostic] = []
+
+    def _check(self, lit: ast.Constant, where: str) -> None:
+        if lit.value not in self.points:
+            self.diags.append(
+                Diagnostic(
+                    code="RPR006",
+                    path=self.path,
+                    line=lit.lineno,
+                    col=lit.col_offset,
+                    message=(
+                        f"fault point {lit.value!r} ({where}) is not in the "
+                        "injection registry — a plan naming it never fires; "
+                        "add it to runtime.faults.FAULT_POINTS or fix the "
+                        "drift"
+                    ),
+                )
+            )
+
+    def visit_Call(self, node: ast.Call) -> None:
+        callee = dotted_name(node.func)
+        last = callee.split(".")[-1] if callee else ""
+        if last in _FAULT_FUNCS:
+            for arg in node.args:
+                for lit in _str_literals(arg):
+                    self._check(lit, f"argument of {last}")
+        for kw in node.keywords:
+            if kw.arg == "point":  # FaultEvent(point=...) and friends
+                for lit in _str_literals(kw.value):
+                    self._check(lit, "keyword point=")
+        self.generic_visit(node)
+
+    def visit_Subscript(self, node: ast.Subscript) -> None:
+        base = dotted_name(node.value)
+        if base and base.split(".")[-1] == "FAULT_POINTS":
+            for lit in _str_literals(node.slice):
+                self._check(lit, "subscript of FAULT_POINTS")
+        self.generic_visit(node)
+
+
+def check_fault_point_drift(
+    path: str, tree: ast.Module, fault_points: frozenset[str]
+) -> list[Diagnostic]:
+    v = _FaultPointDriftVisitor(path, fault_points)
+    v.visit(tree)
+    return v.diags
+
+
 def check_loop_jit(path: str, tree: ast.Module) -> list[Diagnostic]:
     v = _LoopJitVisitor(path)
     v.visit(tree)
@@ -379,6 +450,7 @@ def run_ast_checks(
     source: str,
     vocabulary: frozenset[str],
     objectives: Optional[frozenset[str]] = None,
+    fault_points: Optional[frozenset[str]] = None,
 ) -> list[Diagnostic]:
     """All AST passes (donation included) over one file's source."""
 
@@ -390,6 +462,8 @@ def run_ast_checks(
     diags.extend(check_loop_jit(path, tree))
     diags.extend(check_contextvar_sets(path, tree))
     diags.extend(check_backend_drift(path, tree, vocabulary, objectives))
+    if fault_points is not None:
+        diags.extend(check_fault_point_drift(path, tree, fault_points))
     return diags
 
 
@@ -399,4 +473,5 @@ __all__ = [
     "check_loop_jit",
     "check_contextvar_sets",
     "check_backend_drift",
+    "check_fault_point_drift",
 ]

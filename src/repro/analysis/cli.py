@@ -65,6 +65,18 @@ def build_objectives() -> frozenset[str]:
     return frozenset(OBJECTIVES)
 
 
+def build_fault_points() -> frozenset[str]:
+    """The fault-injection point vocabulary, keyed off the live registry.
+
+    Sourced from ``repro.runtime.faults.FAULT_POINTS`` so the drift check
+    can never disagree with what ``validate_point`` accepts.
+    """
+
+    from repro.runtime.faults import FAULT_POINTS
+
+    return frozenset(FAULT_POINTS)
+
+
 def discover(paths: list[str]) -> tuple[list[str], list[str]]:
     """(.py files, .json files) under the given paths, fixtures pruned."""
 
@@ -92,6 +104,7 @@ def analyze_file(
     path: str,
     vocabulary: Optional[frozenset[str]] = None,
     objectives: Optional[frozenset[str]] = None,
+    fault_points: Optional[frozenset[str]] = None,
 ) -> list[Diagnostic]:
     """All applicable AST passes + suppressions for one Python file."""
 
@@ -99,10 +112,14 @@ def analyze_file(
         vocabulary = build_vocabulary()
     if objectives is None:
         objectives = build_objectives()
+    if fault_points is None:
+        fault_points = build_fault_points()
     with open(path, encoding="utf-8") as f:
         source = f.read()
     try:
-        diags = ast_checks.run_ast_checks(path, source, vocabulary, objectives)
+        diags = ast_checks.run_ast_checks(
+            path, source, vocabulary, objectives, fault_points
+        )
     except SyntaxError as e:
         # Not our diagnostic to own: surface as a hard error.
         raise SystemExit(f"{path}: cannot parse: {e}") from e
@@ -116,6 +133,7 @@ def analyze_paths(
     artifacts: Optional[str] = None,
     vocabulary: Optional[frozenset[str]] = None,
     objectives: Optional[frozenset[str]] = None,
+    fault_points: Optional[frozenset[str]] = None,
 ) -> list[Diagnostic]:
     """The full analyzer: AST passes over ``paths`` + contract checks."""
 
@@ -123,10 +141,12 @@ def analyze_paths(
         vocabulary = build_vocabulary()
     if objectives is None:
         objectives = build_objectives()
+    if fault_points is None:
+        fault_points = build_fault_points()
     diags: list[Diagnostic] = []
     py_files, json_files = discover(paths)
     for path in py_files:
-        diags.extend(analyze_file(path, vocabulary, objectives))
+        diags.extend(analyze_file(path, vocabulary, objectives, fault_points))
     for path in json_files:
         diags.extend(configcheck.check_tuning_cache_file(path))
     if contracts:

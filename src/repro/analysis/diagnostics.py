@@ -41,6 +41,8 @@ CODES: dict[str, str] = {
     "RPR005": "backend-name or scheduling-objective string literal outside "
               "the live vocabulary (execution.BACKENDS / schedule.OBJECTIVES "
               "drift)",
+    "RPR006": "fault-point name string literal outside the live injection "
+              "registry (runtime.faults.FAULT_POINTS drift)",
     "RPR101": "backend-registry closure violation (BACKENDS / BACKEND_OPS / "
               "INTERPRET_TWIN / LEAN_VARIANTS)",
     "RPR102": "kernel-family closure violation (GEMM_KERNELS / paged-attn "

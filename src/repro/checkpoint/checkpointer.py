@@ -34,6 +34,8 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from repro.util.atomic import atomic_write_json, atomic_write_text, fsync_dir
+
 
 def _flatten(tree) -> dict[str, np.ndarray]:
     flat = {}
@@ -92,14 +94,22 @@ class Checkpointer:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         pid = getattr(jax, "process_index", lambda: 0)()
-        np.savez(os.path.join(tmp, f"shard_p{pid:04d}.npz"), **flat)
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-        with open(os.path.join(tmp, "COMMITTED"), "w") as f:
-            f.write("ok")
+        shard = os.path.join(tmp, f"shard_p{pid:04d}.npz")
+        np.savez(shard, **flat)
+        # fsync-before-rename audit: the shard, the manifest, and the
+        # commit marker must all be on disk before the rename publishes
+        # the step dir — otherwise a crash right after the rename can
+        # expose a committed-looking checkpoint with torn payloads.
+        with open(shard, "rb") as f:
+            os.fsync(f.fileno())
+        atomic_write_json(os.path.join(tmp, "manifest.json"), manifest,
+                          indent=None, sort_keys=False, newline=False)
+        atomic_write_text(os.path.join(tmp, "COMMITTED"), "ok")
+        fsync_dir(tmp)
         if os.path.exists(d):
             shutil.rmtree(d)
         os.rename(tmp, d)
+        fsync_dir(self.dir)
         self._gc()
 
     def _gc(self):

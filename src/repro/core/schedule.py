@@ -475,6 +475,64 @@ class DynamicScheduler:
         return t
 
 
+def deficit_route(weights: Sequence[float], routed: Sequence[int]) -> int:
+    """Largest-remainder router: the class furthest behind its quota.
+
+    Given target ``weights`` and cumulative per-class ``routed`` counts,
+    returns the class whose share of the *next* total (``sum(routed)+1``)
+    is most under-served — so the running split tracks the proportional
+    quota with bounded deficit, exactly like the serving engine's
+    admission router (extracted from there so the fleet can route
+    requests over engines with the same arithmetic it uses over classes).
+    """
+
+    w = np.asarray(weights, dtype=np.float64)
+    if w.ndim != 1 or len(w) != len(routed):
+        raise ValueError(
+            f"weights/routed arity mismatch: {len(w)} vs {len(routed)}"
+        )
+    if not w.sum() > 0:
+        raise ValueError(f"need positive total weight, got {w.tolist()}")
+    total = int(sum(routed)) + 1
+    quota = w / w.sum() * total
+    base = np.floor(quota).astype(np.int64)
+    rem = total - int(base.sum())
+    order = np.argsort(-(quota - base), kind="stable")
+    base[order[:rem]] += 1
+    return int(np.argmax(base - np.asarray(routed)))
+
+
+def fleet_scheduler(
+    rel_throughput: Sequence[float],
+    *,
+    ema: float = 0.5,
+    rebalance_threshold: float = 0.05,
+    objective: str = "perf",
+    powers: Optional[Sequence[float]] = None,
+) -> DynamicScheduler:
+    """The engines-as-classes adapter: a :class:`DynamicScheduler` whose
+    "classes" are whole serving engines.
+
+    This is the paper's scheduling story lifted one level — calibrated
+    tokens-per-second per engine plays ``rel_throughput``, and the same
+    EMA/drift/hysteresis machinery (class-count-agnostic since PR 3)
+    balances *requests* over engines instead of rows over pods.  No
+    tiles, no worker multiplicity: a request is the indivisible unit.
+    """
+
+    rel = [float(r) for r in rel_throughput]
+    if not rel or min(rel) <= 0:
+        raise ValueError(f"need positive per-engine throughputs, got {rel}")
+    return DynamicScheduler(
+        len(rel),
+        init_ratios=rel,
+        ema=ema,
+        rebalance_threshold=rebalance_threshold,
+        objective=objective,
+        powers=powers,
+    )
+
+
 def balanced_ratio(rates: Sequence[float]) -> float:
     """The paper's optimal ratio knob: fast rate / slow rate (Section 5.2.2).
 
@@ -504,4 +562,6 @@ __all__ = [
     "ca_sas_partition",
     "das_schedule",
     "balanced_ratio",
+    "deficit_route",
+    "fleet_scheduler",
 ]

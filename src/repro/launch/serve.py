@@ -226,6 +226,61 @@ def _engine(cfg, params, asym, prompts, args, seq_cap):
     return out, timings, device_class, exec_backend, shard_classes, engine_stats
 
 
+def _fleet(cfg, params, asym, prompts, args, seq_cap):
+    """The multi-engine fleet path (``--fleet N``): N engines, one
+    submit/stream front, DAS request scheduling over calibrated
+    per-engine throughput (see runtime/fleet.py)."""
+
+    from repro.runtime.fleet import Fleet
+    from repro.runtime.serving import ServingEngine
+
+    engines = []
+    for _ in range(args.fleet):
+        a = AsymmetricMesh(
+            biglittle_classes(chips_per_pod=1), strategy=args.strategy,
+            batch_tile=1, objective=args.objective,
+        )
+        layout = a.batch_layout(max(1, args.batch // args.fleet))
+        engines.append(ServingEngine(
+            cfg, params, a,
+            seq_cap=seq_cap,
+            slots_per_pod=args.slots_per_pod or layout.c_max,
+            class_sharded=args.class_sharded,
+            paged=args.paged,
+            page_size=args.page_size,
+            pool_pages=args.pool_pages,
+            eos_id=args.eos_id,
+        ))
+    fleet = Fleet(engines, objective=args.objective)
+    print("fleet rel_throughput:", [round(r, 3) for r in fleet.rel_throughput])
+    out = fleet.generate(prompts, args.gen_len)
+    # Engines tick in lockstep and would run concurrently in production,
+    # so the fleet's modeled span is the max over engines, and compile is
+    # paid once per engine in parallel.
+    timings = {
+        "compile_s": max(e.stats.compile_s for e in engines),
+        "decode_s": max(e.stats.decode_s for e in engines),
+        "decode_steps": max(e.stats.decode_steps for e in engines),
+        "tokens": sum(e.stats.tokens for e in engines),
+    }
+    ctx = engines[0].asym.execution_context()
+    device_class = "mixed" if engines[0].mixed else ctx.device_class
+    exec_backend = (
+        "+".join(sorted({p.backend for p in engines[0].provenance}))
+        if engines[0].mixed
+        else ctx.backend()
+    )
+    engine_stats = {
+        "fleet": fleet.stats.snapshot(),
+        "health": fleet.health(),
+        "engines": [e.stats.snapshot() for e in engines],
+        # the stop-count surface _engine provides, fleet-wide
+        "completed_eos": sum(e.stats.completed_eos for e in engines),
+        "completed_budget": sum(e.stats.completed_budget for e in engines),
+    }
+    return out, timings, device_class, exec_backend, None, engine_stats
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -247,6 +302,9 @@ def main():
     ap.add_argument("--one-shot", action="store_true",
                     help="legacy path: chunk-table relayout per call + "
                          "per-token jit dispatches (comparison baseline)")
+    ap.add_argument("--fleet", type=int, default=0, metavar="N",
+                    help="serve through a fault-tolerant fleet of N engines "
+                         "behind one scheduler (0 = single engine)")
     ap.add_argument("--slots-per-pod", type=int, default=None,
                     help="engine slot-region size (default: the layout's c_max)")
     ap.add_argument("--paged", default="off", choices=["auto", "on", "off"],
@@ -300,13 +358,18 @@ def main():
         raise SystemExit("--device-class applies to the --one-shot path only")
     if args.one_shot and args.paged != "off":
         raise SystemExit("--paged applies to the engine path only")
+    if args.fleet and args.one_shot:
+        raise SystemExit("--fleet fronts engine instances; it cannot be "
+                         "combined with --one-shot")
+    if args.fleet < 0:
+        raise SystemExit(f"--fleet must be >= 0, got {args.fleet}")
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len), dtype=np.int32)
     seq_cap = args.prompt_len + args.gen_len
 
     t0 = time.time()
-    run = _one_shot if args.one_shot else _engine
+    run = _one_shot if args.one_shot else (_fleet if args.fleet else _engine)
     out, timings, device_class, exec_backend, shard_classes, engine_stats = run(
         cfg, params, asym, prompts, args, seq_cap
     )
@@ -328,7 +391,8 @@ def main():
     steady = tokens / timings["decode_s"] if timings["decode_s"] > 0 else 0.0
     summary = {
         "arch": cfg.name,
-        "path": "one-shot" if args.one_shot else "engine",
+        "path": ("one-shot" if args.one_shot
+                 else f"fleet:{args.fleet}" if args.fleet else "engine"),
         "objective": args.objective,
         "device_class": device_class,
         "exec_backend": exec_backend,
@@ -353,10 +417,11 @@ def main():
         if args.trace:
             summary["trace"] = buf.save(args.trace)
         if args.metrics:
-            with open(args.metrics, "w") as f:
-                json.dump(OBS.REGISTRY.snapshot(), f, indent=1, sort_keys=True)
-                f.write("\n")
-            summary["metrics"] = args.metrics
+            from repro.util.atomic import atomic_write_json
+
+            summary["metrics"] = atomic_write_json(
+                args.metrics, OBS.REGISTRY.snapshot(), indent=1, sort_keys=True
+            )
     print(json.dumps(summary))
 
 

@@ -5,6 +5,12 @@ already-exported Chrome ``traceEvents`` file and prints a per-name
 summary (count, total/mean/max duration) plus a per-device-class
 rollup of the spans that carry scheduling provenance.
 
+Robust to damaged inputs by design: the post-mortem tool for a killed
+engine must not die of the kill itself.  A truncated or corrupt trace
+file is *salvaged* — every record that still parses is kept, bad ones
+are skipped and counted (``skipped_records`` in the meta, a WARNING in
+the CLI header) — instead of crashing on the first bad byte.
+
 Usage::
 
     python -m repro.observability.report trace.json [--chrome out.json]
@@ -15,19 +21,77 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
 from typing import Optional, Sequence
+
+from repro.util.atomic import atomic_write_json
+
+
+def _salvage_events(text: str) -> tuple[list[dict], int]:
+    """Recover parseable event objects from a damaged trace file.
+
+    Scans the region after the first ``"events"``/``"traceEvents"`` key
+    (or the whole text when neither survives), decoding one JSON object
+    at a time; anything that fails to parse is skipped to the next ``{``
+    and counted.  Lossy by nature — the point is that a truncated tail
+    (killed engine, full disk) costs only the torn record, not the run's
+    whole trace.
+    """
+
+    m = re.search(r'"(?:traceEvents|events)"\s*:\s*\[', text)
+    pos = m.end() if m else 0
+    dec = json.JSONDecoder()
+    events: list[dict] = []
+    skipped = 0
+    while True:
+        nxt = text.find("{", pos)
+        if nxt < 0:
+            break
+        # A '{' at depth 0 here is an event candidate; on decode failure
+        # count it and resume after the brace.
+        try:
+            obj, end = dec.raw_decode(text, nxt)
+        except json.JSONDecodeError:
+            skipped += 1
+            pos = nxt + 1
+            continue
+        if isinstance(obj, dict):
+            events.append(obj)
+        else:
+            skipped += 1
+        pos = end
+    return events, skipped
 
 
 def load_events(path: str) -> tuple[list[dict], dict]:
     """Normalize either trace format to native-style event dicts
-    (``ts``/``dur`` in seconds); returns ``(events, meta)``."""
+    (``ts``/``dur`` in seconds); returns ``(events, meta)``.
+
+    Corrupt or truncated files degrade to a salvage scan: bad records
+    are skipped, and their count lands in ``meta["skipped_records"]``
+    (0 when the file parsed cleanly).
+    """
 
     with open(path) as f:
-        data = json.load(f)
+        text = f.read()
+    skipped = 0
+    try:
+        data = json.loads(text)
+    except json.JSONDecodeError:
+        chrome = '"traceEvents"' in text
+        raw, skipped = _salvage_events(text)
+        skipped = max(skipped, 1)  # the torn tail itself counts
+        if chrome:
+            data = {"traceEvents": raw}
+        else:
+            data = {"events": raw}
     if isinstance(data, dict) and "traceEvents" in data:
         events = []
         for ev in data["traceEvents"]:
+            if not isinstance(ev, dict):
+                skipped += 1
+                continue
             events.append({
                 "name": ev.get("name", "?"),
                 "cat": ev.get("cat", "span"),
@@ -38,10 +102,20 @@ def load_events(path: str) -> tuple[list[dict], dict]:
                 "parent": (ev.get("args") or {}).get("parent"),
                 "args": ev.get("args") or {},
             })
-        return events, {"format": "chrome", **(data.get("otherData") or {})}
+        meta = {"format": "chrome", **(data.get("otherData") or {})}
+        meta["skipped_records"] = skipped
+        return events, meta
     if isinstance(data, dict) and "events" in data:
         meta = {k: v for k, v in data.items() if k != "events"}
-        return list(data["events"]), {"format": "native", **meta}
+        events = []
+        for ev in data["events"]:
+            if isinstance(ev, dict):
+                events.append(ev)
+            else:
+                skipped += 1
+        meta = {"format": "native", **meta}
+        meta["skipped_records"] = skipped
+        return events, meta
     raise ValueError(f"{path}: neither a native trace nor a Chrome trace")
 
 
@@ -51,7 +125,9 @@ def summarize(events: list[dict], *, top: int = 20) -> str:
 
     by_name: dict[str, list[float]] = {}
     for e in spans:
-        by_name.setdefault(e["name"], []).append(float(e.get("dur", 0.0)))
+        by_name.setdefault(e.get("name", "?"), []).append(
+            float(e.get("dur", 0.0))
+        )
     by_class: dict[str, list[float]] = {}
     for e in spans:
         dc = (e.get("args") or {}).get("device_class")
@@ -81,7 +157,8 @@ def summarize(events: list[dict], *, top: int = 20) -> str:
     if instants:
         counts: dict[str, int] = {}
         for e in instants:
-            counts[e["name"]] = counts.get(e["name"], 0) + 1
+            name = e.get("name", "?")
+            counts[name] = counts.get(name, 0) + 1
         lines += ["", "instants: " + ", ".join(
             f"{n}×{c}" for n, c in sorted(counts.items())
         )]
@@ -144,11 +221,10 @@ def export_chrome(events: list[dict], path: str) -> str:
         if e.get("parent"):
             rec["args"]["parent"] = e["parent"]
         out.append(rec)
-    with open(path, "w") as f:
-        json.dump({"traceEvents": out, "displayTimeUnit": "ms"}, f,
-                  indent=1, default=str)
-        f.write("\n")
-    return path
+    return atomic_write_json(
+        path, {"traceEvents": out, "displayTimeUnit": "ms"},
+        indent=1, sort_keys=False, default=str,
+    )
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -168,6 +244,11 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     head = f"{args.trace} [{meta.get('format')}]"
     if dropped:
         head += f" — WARNING: {dropped} events dropped (buffer capacity)"
+    skipped = meta.get("skipped_records", 0)
+    if skipped:
+        head += (
+            f" — WARNING: {skipped} corrupt/truncated records skipped"
+        )
     print(head)
     print(summarize(events, top=args.top))
     if args.chrome:

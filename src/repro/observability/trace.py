@@ -32,11 +32,12 @@ from __future__ import annotations
 import collections
 import contextvars
 import dataclasses
-import json
 import os
 import threading
 import time
 from typing import Any, Optional
+
+from repro.util.atomic import atomic_write_json
 
 DEFAULT_CAPACITY = 65536
 
@@ -101,10 +102,12 @@ class TraceBuffer:
         }
 
     def save(self, path: str) -> str:
-        with open(path, "w") as f:
-            json.dump(self.to_dict(), f, indent=1, sort_keys=True, default=str)
-            f.write("\n")
-        return path
+        # Atomic + durable (shared helper): a crash mid-save — which is
+        # exactly when a trace matters most — must never leave a torn
+        # file for the post-mortem report to choke on.
+        return atomic_write_json(
+            path, self.to_dict(), indent=1, sort_keys=True, default=str
+        )
 
     def chrome_trace(self) -> dict:
         """Chrome ``traceEvents`` JSON (times in microseconds)."""
@@ -135,10 +138,9 @@ class TraceBuffer:
         }
 
     def export_chrome_trace(self, path: str) -> str:
-        with open(path, "w") as f:
-            json.dump(self.chrome_trace(), f, indent=1, default=str)
-            f.write("\n")
-        return path
+        return atomic_write_json(
+            path, self.chrome_trace(), indent=1, sort_keys=False, default=str
+        )
 
 
 # -- module state (the one switch) ------------------------------------------

@@ -90,6 +90,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import ArchConfig
 from repro.core.asymmetric import AsymmetricMesh
+from repro.core.schedule import deficit_route
 from repro.distributed import sharding as SH
 from repro.models import model_zoo as Z
 from repro.models import transformer as TX
@@ -579,20 +580,81 @@ class ServingEngine:
         rid = self._next_rid
         self._next_rid += 1
         if route_class is None:
-            w = self._class_weights()
-            total = sum(self._routed) + 1
-            quota = w / w.sum() * total
-            base = np.floor(quota).astype(np.int64)
-            rem = total - int(base.sum())
-            order = np.argsort(-(quota - base), kind="stable")
-            base[order[:rem]] += 1
-            deficits = base - np.asarray(self._routed)
-            route_class = int(np.argmax(deficits))
+            route_class = deficit_route(self._class_weights(), self._routed)
         self.queues[route_class].append(
             Request(rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens))
         )
         self._routed[route_class] += 1
         return rid
+
+    # -- fleet surface: drain/export, health, calibration --------------------
+
+    def withdraw(self, rid: int) -> Optional[Request]:
+        """Remove one *queued* (not yet admitted) request; returns it.
+
+        The router's cumulative count is rolled back so future routing
+        reflects only the work the engine kept.  ``None`` if ``rid`` is
+        not queued (already admitted, completed, or unknown) — admitted
+        work cannot be withdrawn; it runs to completion.
+        """
+
+        for ci, q in enumerate(self.queues):
+            for i, req in enumerate(q):
+                if req.rid == rid:
+                    del q[i]
+                    self._routed[ci] -= 1
+                    return req
+        return None
+
+    def export_queued(self) -> list[Request]:
+        """Drain every class queue, in submission (rid) order.
+
+        The fleet's migration path: a saturated, parked, or dead engine
+        hands its not-yet-admitted requests back so they can be re-routed
+        elsewhere.  Router counts roll back as in :meth:`withdraw`.
+        """
+
+        out: list[Request] = []
+        for ci, q in enumerate(self.queues):
+            while q:
+                out.append(q.popleft())
+                self._routed[ci] -= 1
+        out.sort(key=lambda r: r.rid)
+        return out
+
+    def partial_tokens(self, rid: int) -> Optional[np.ndarray]:
+        """Tokens generated so far for an in-flight request (else None).
+
+        The fleet's streaming surface: completed tokens come from
+        :attr:`completions`; mid-decode progress comes from here.
+        """
+
+        for slot, req in self._slot_req.items():
+            if req.rid == rid:
+                return np.asarray(self._slot_toks[slot], np.int32)
+        return None
+
+    def calibrated_tps(self) -> float:
+        """Aggregate calibrated throughput (sum of per-pod EMA rates).
+
+        Dimensionless rows-per-modeled-second units — exactly what the
+        fleet scheduler needs as this engine's ``rel_throughput``.
+        """
+
+        return float(np.sum(self.asym.scheduler.rates))
+
+    def health(self) -> dict:
+        """The engine health surface a fleet front polls each tick."""
+
+        return {
+            "queued": sum(len(q) for q in self.queues),
+            "active": int((self.slot_rid >= 0).sum()),
+            "slots": self.n_slots,
+            "parked_pods": sorted(self._parked),
+            "calibrated_tps": self.calibrated_tps(),
+            "completed": self.stats.completed,
+            "admission_deferrals": self.stats.admission_deferrals,
+        }
 
     # -- slot-region budgets (resize between steps only) ---------------------
 

@@ -41,8 +41,9 @@ the field are ``"perf"``.  ``time_s``/``analytical_time_s`` are in the
 objective's units.  The tuner treats an entry tuned under a different
 objective as a miss — its winner optimized the wrong metric.
 
-Writes are atomic (tempfile + ``os.replace``) so a crashed tuner never
-leaves a torn cache for a training job to read.
+Writes are atomic and durable (``repro.util.atomic``: tempfile + fsync +
+``os.replace``) so a crashed tuner never leaves a torn cache for a
+training job to read.
 """
 
 from __future__ import annotations
@@ -51,10 +52,10 @@ import dataclasses
 import json
 import logging
 import os
-import tempfile
 from typing import Any, Optional
 
 from repro.core.blocking import TPU_V5E, BlockConfig, TpuCoreSpec, derive_block_config
+from repro.util.atomic import atomic_write_json
 
 log = logging.getLogger(__name__)
 
@@ -116,23 +117,17 @@ class TuningCache:
         return cls(path=path, entries=dict(raw.get("entries", {})))
 
     def save(self, path: Optional[str] = None) -> str:
-        """Atomic write: tempfile in the target dir, then ``os.replace``."""
+        """Atomic durable write (shared ``repro.util.atomic`` helper:
+        tempfile in the target dir, fsync, then ``os.replace``)."""
 
         path = path or self.path
         if path is None:
             raise ValueError("TuningCache.save() needs a path")
         payload = {"version": CACHE_VERSION, "entries": self.entries}
-        d = os.path.dirname(os.path.abspath(path))
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d, prefix=".tuning-cache-", suffix=".json")
-        try:
-            with os.fdopen(fd, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-            os.replace(tmp, path)
-        except BaseException:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-            raise
+        atomic_write_json(
+            path, payload, indent=1, sort_keys=True, newline=False,
+            prefix=".tuning-cache-",
+        )
         self.path = path
         return path
 

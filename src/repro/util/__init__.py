@@ -1,0 +1,5 @@
+"""Small dependency-free utilities shared across subsystems."""
+
+from repro.util.atomic import atomic_write_json, atomic_write_text, fsync_dir
+
+__all__ = ["atomic_write_json", "atomic_write_text", "fsync_dir"]

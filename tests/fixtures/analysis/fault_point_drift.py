@@ -1,0 +1,27 @@
+"""Fixture: fault-injection point-name drift (RPR006).
+
+Every literal below names an injection point the live
+``runtime.faults.FAULT_POINTS`` registry does not know; each trigger
+form gets one.  A misspelled point never fires — the plan silently
+tests nothing.
+"""
+
+from repro.runtime.faults import FAULT_POINTS, FaultEvent, fault_active, validate_point
+
+
+def plan_tick(engine, tick):
+    if fault_active("pod_deth", engine=engine, tick=tick):  # line 13: RPR006 (funnel argument)
+        return None
+    validate_point("engine_stalled")  # line 15: RPR006 (funnel argument)
+    ev = FaultEvent(point="admission_failure", engine=engine, tick=tick)  # line 16: RPR006 (keyword)
+    doc = FAULT_POINTS["latency_spikes"]  # line 17: RPR006 (subscript)
+    return ev, doc
+
+
+def valid_tokens_pass(engine, tick):
+    if fault_active("pod_death", engine=engine, tick=tick):
+        return None
+    validate_point("engine_stall")
+    ev = FaultEvent(point="admission_fail", engine=engine, tick=tick)
+    doc = FAULT_POINTS["latency_spike"]
+    return ev, doc

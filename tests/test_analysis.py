@@ -58,6 +58,14 @@ class TestRegistryContracts:
         # be flagged as backend drift.
         assert {"cost-model", "wallclock"} <= vocab
 
+    def test_fault_point_vocabulary_tracks_live_registry(self):
+        from repro.runtime.faults import FAULT_POINTS
+
+        points = analysis_cli.build_fault_points()
+        assert points == frozenset(FAULT_POINTS)
+        assert {"engine_stall", "pod_death", "admission_fail",
+                "latency_spike"} <= points
+
 
 # ---------------------------------------------------------------------------
 # AST passes over the fixture corpus
@@ -106,6 +114,31 @@ class TestFixtureCorpus:
             ("RPR005", 13),
         ]
         assert all("schedule.OBJECTIVES" in d.message for d in diags)
+
+    def test_fault_point_drift_bug_class(self):
+        # The ISSUE-10 class: each trigger form (funnel argument, point=
+        # keyword, FAULT_POINTS subscript) fires once; the valid-token
+        # twin function passes.
+        diags = analyze_file(fx("fault_point_drift.py"))
+        assert code_lines(diags) == [
+            ("RPR006", 13),
+            ("RPR006", 15),
+            ("RPR006", 16),
+            ("RPR006", 17),
+        ]
+        assert all("injection registry" in d.message for d in diags)
+
+    def test_fault_point_checks_off_without_vocabulary(self):
+        # fault_points=None disables only the RPR006 arm.
+        from repro.analysis import ast_checks
+
+        with open(fx("fault_point_drift.py"), encoding="utf-8") as f:
+            src = f.read()
+        vocab = analysis_cli.build_vocabulary()
+        assert ast_checks.run_ast_checks(
+            fx("fault_point_drift.py"), src, vocab,
+            objectives=analysis_cli.build_objectives(), fault_points=None,
+        ) == []
 
     def test_objective_checks_off_without_vocabulary(self):
         # objectives=None disables only the objective arm; backend drift
@@ -228,7 +261,7 @@ class TestCli:
         payload = json.loads(capsys.readouterr().out)
         codes = {d["code"] for d in payload["diagnostics"]}
         assert {"RPR000", "RPR001", "RPR002", "RPR003", "RPR004", "RPR005",
-                "RPR201"} <= codes
+                "RPR006", "RPR201"} <= codes
 
     def test_clean_file_exits_zero(self, capsys):
         rc = analysis_cli.main([fx("clean.py"), "--no-contracts"])

@@ -252,6 +252,71 @@ class TestBufferAndExport:
             bad.write_text("[1, 2]")
             report.load_events(str(bad))
 
+    def test_truncated_native_trace_is_salvaged(self, tmp_path):
+        # The ISSUE-10 robustness contract: a trace torn mid-write (killed
+        # engine, full disk) degrades to a salvage scan — every record
+        # that still parses is kept, the torn tail is counted, and the
+        # loader never raises.
+        T.enable()
+        for i in range(6):
+            T.instant(f"ev{i}", k=i)
+        buf = T.disable()
+        p = tmp_path / "t.json"
+        buf.save(str(p))
+        text = p.read_text()
+        # Tear the file inside the LAST event record (native format sorts
+        # keys, so "events" is the final array in the file).
+        p.write_text(text[: text.rfind("{") + 8])
+
+        events, meta = report.load_events(str(p))
+        assert meta["format"] == "native"
+        assert meta["skipped_records"] >= 1
+        names = [e["name"] for e in events]
+        assert names == [f"ev{i}" for i in range(5)]  # all but the torn one
+        assert events[0]["args"] == {"k": 0}
+
+    def test_truncated_chrome_trace_is_salvaged(self, tmp_path):
+        T.enable()
+        with T.span("work"):
+            T.instant("tick")
+        buf = T.disable()
+        p = tmp_path / "c.json"
+        buf.export_chrome_trace(str(p))
+        text = p.read_text()
+        # Tear the file inside the last record ("work" closes after the
+        # instant, so it serializes last).
+        p.write_text(text[: text.rfind('"name": "work"') + 8])
+
+        events, meta = report.load_events(str(p))
+        assert meta["format"] == "chrome"
+        assert meta["skipped_records"] >= 1
+        assert [e["name"] for e in events] == ["tick"]  # "work" record torn
+
+    def test_clean_trace_reports_zero_skipped(self, tmp_path):
+        T.enable()
+        T.instant("x")
+        T.disable().save(str(tmp_path / "t.json"))
+        _, meta = report.load_events(str(tmp_path / "t.json"))
+        assert meta["skipped_records"] == 0
+
+    def test_report_cli_warns_on_corrupt_trace(self, tmp_path, capsys):
+        # The CLI survives the damaged file and says so in the header —
+        # the post-mortem tool must not die of the kill it reports on.
+        T.enable()
+        for i in range(4):
+            T.instant(f"ev{i}")
+        buf = T.disable()
+        p = tmp_path / "t.json"
+        buf.save(str(p))
+        text = p.read_text()
+        p.write_text(text[: text.rfind("{") + 8])
+
+        rc = report.main([str(p)])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "WARNING" in out and "skipped" in out
+        assert "ev0" in out
+
     def test_report_cli_main(self, tmp_path, capsys):
         T.enable()
         with T.span("engine.decode_step"):

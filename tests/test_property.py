@@ -156,3 +156,66 @@ def test_batch_layout_mask_consistency(gb, r2, tile):
     assert layout.mask.sum() == gb
     assert layout.c_max % tile == 0
     assert layout.c_max >= max(layout.sizes)
+
+
+# ---------------------------------------------------------------------------
+# Fleet: request conservation under arbitrary seeded fault plans
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed=st.integers(0, 10_000),
+    n_engines=st.integers(2, 4),
+    n_requests=st.integers(1, 12),
+    n_events=st.integers(0, 6),
+)
+@settings(max_examples=50, deadline=None)
+def test_fleet_conservation_under_faults(seed, n_engines, n_requests, n_events):
+    """Under ANY seeded fault plan: every request completes exactly once,
+    tokens match the fault-free deterministic decode, and the fleet's
+    counters reconcile with its trace instants (no silent drops, no
+    silent duplicates, no unrecorded recovery actions)."""
+
+    from fleetstub import StubEngine, stub_tokens
+    from repro import observability as OBS
+    from repro.runtime import faults as F
+    from repro.runtime.fleet import Fleet
+
+    rng = np.random.default_rng(seed)
+    prompts = [
+        rng.integers(0, 997, (int(rng.integers(1, 6)),)).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    plan = F.FaultPlan.seeded(
+        seed, n_engines=n_engines, horizon=12, n_events=n_events
+    )
+    engines = [
+        StubEngine(
+            n_slots=int(rng.integers(1, 3)), speed=float(rng.integers(1, 4))
+        )
+        for _ in range(n_engines)
+    ]
+    fleet = Fleet(engines, retry_backoff=1)
+    OBS.enable()
+    try:
+        with F.injected(plan):
+            for p in prompts:
+                fleet.submit(p, 3)
+            fleet.run()
+    finally:
+        buf = OBS.disable()
+
+    # Exactly once: no drops, no duplicates, every rid accounted for.
+    assert fleet.stats.completed == fleet.stats.submitted == n_requests
+    assert fleet.stats.duplicate_completions == 0
+    assert sorted(c.rid for c in fleet.completions) == list(range(n_requests))
+    # Bit-identical to the fault-free decode of each request's own prompt.
+    for c in fleet.completions:
+        got = np.asarray(c.tokens)
+        assert np.array_equal(got[: c.prompt_len], prompts[c.rid])
+        assert np.array_equal(got[c.prompt_len:], stub_tokens(prompts[c.rid], 3))
+    # Counters reconcile with the trace: each recovery action left a mark.
+    names = [e.name for e in buf.events if e.ph == "i"]
+    assert names.count("fleet.migrate") == fleet.stats.migrated
+    assert names.count("fleet.retry") == fleet.stats.retries
+    assert names.count("fleet.engine_kill") == fleet.stats.engine_kills
